@@ -1,0 +1,43 @@
+"""Paper Table 3 — component ablations under the three traffic patterns.
+
+  FUSCO        = fused_hier, balancer on
+  dComm-off    = disagg (explicit rearrangement passes around the collective)
+  Planner-off  = fused_flat (fusion kept, NO hierarchical dedup/forwarding)
+  Balancer-off = fused_hier with the static same-local-index grouping
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import PREAMBLE, run_sub
+
+CODE = PREAMBLE + """
+T = 1024
+results = {}
+for pattern in ["real_world", "single_node", "imbalanced"]:
+    x, A, g, w1, w3, w2 = inputs(pattern, T)
+    variants = {
+        "fusco": ("fused_hier", True),
+        "dcomm_off": ("disagg", True),
+        "planner_off": ("fused_flat", True),
+        "balancer_off": ("fused_hier", False),
+    }
+    row = {}
+    for name, (engine, bal) in variants.items():
+        f = jax.jit(engine_fn(engine, T, balancer=bal))
+        row[name] = timeit(f, x, A, g, w1, w3, w2)
+    results[pattern] = row
+print(json.dumps(results))
+"""
+
+
+def run() -> list[tuple[str, float, str]]:
+    res = run_sub(CODE, timeout=1800)
+    rows = []
+    for pattern, r in res.items():
+        base = r["fusco"]
+        for name, t in r.items():
+            rows.append((f"ablation/{pattern}/{name}", t * 1e6, ""))
+            if name != "fusco":
+                rows.append((f"ablation/{pattern}/{name}_degradation",
+                             (t - base) / t * 100.0, "%"))
+    return rows

@@ -1,0 +1,60 @@
+"""Paper Table 1 — rearrangement share of the disaggregated shuffle.
+
+Times the disaggregated pipeline's materialised permutation passes in
+isolation vs the full shuffle (32 MB-scale payload, like the paper), plus the
+structural count of eliminated memory passes for the fused engines.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import PREAMBLE, run_sub
+
+CODE = PREAMBLE + """
+# ~32 MB payload per lane: T rows x D f32
+T = 1024
+x, A, g, w1, w3, w2 = inputs("real_world", T)
+
+full = jax.jit(engine_fn("disagg", T))
+t_full = timeit(full, x, A, g, w1, w3, w2)
+fused = jax.jit(engine_fn("fused_flat", T))
+t_fused = timeit(fused, x, A, g, w1, w3, w2)
+
+# rearrangement passes in isolation: sort-by-lane + pack (the pre-a2a
+# permutation of the disagg path), doubled for the receive side
+from repro.core.routing import balanced_replica_choice
+from repro.core.descriptors import build_slot_table, gather_rows, drop_neg
+
+def rearrange_only(x, A):
+    t = x.shape[0]
+    lane = placement.lane_of_expert(A).reshape(-1)
+    tok = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], A.shape).reshape(-1)
+    order = jnp.argsort(lane, stable=True)
+    xs = jnp.take(x, jnp.take(tok, order), axis=0)
+    st = build_slot_table(jnp.take(lane, order), EP, 4096)
+    inv = jnp.full((EP * 4096,), -1, jnp.int32).at[
+        drop_neg(st.slot, EP * 4096)].set(jnp.arange(t * K, dtype=jnp.int32), mode="drop")
+    return gather_rows(xs, inv)
+
+rf = shard_map(rearrange_only, mesh=mesh, in_specs=(P("model"), P("model")),
+               out_specs=P("model"), check_vma=False)
+t_rearr = timeit(jax.jit(rf), x, A) * 2        # send + receive side
+
+print(json.dumps({
+    "disagg_total": t_full,
+    "fused_total": t_fused,
+    "rearrange_passes": t_rearr,
+    "rearr_ratio": t_rearr / t_full,
+    "payload_mb": T * K * D * 4 / 1e6,
+}))
+"""
+
+
+def run() -> list[tuple[str, float, str]]:
+    r = run_sub(CODE, timeout=1200)
+    return [
+        ("breakdown/disagg_total", r["disagg_total"] * 1e6, ""),
+        ("breakdown/fused_total", r["fused_total"] * 1e6, ""),
+        ("breakdown/rearrange_passes", r["rearrange_passes"] * 1e6, ""),
+        ("breakdown/rearr_ratio_of_total", r["rearr_ratio"] * 100, "%"),
+        ("breakdown/payload_mb", r["payload_mb"], "MB"),
+    ]

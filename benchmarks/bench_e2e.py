@@ -1,0 +1,74 @@
+"""Paper Fig. 11 — end-to-end train iteration time and TTFT per engine.
+
+Two reduced MoE models (qwen3-moe-like and a deepseek-proportioned wide-MoE)
+on the 8-device host mesh; engines swapped via DcommConfig only (the paper's
+drop-in property).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import REPO, run_sub
+
+CODE = """
+import json, time
+import jax, jax.numpy as jnp
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, MoESpec
+from repro.models import zoo
+from repro.models.lm import make_context
+from repro.launch.steps import make_train_step
+from repro.optim import adamw
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+deepseek_like = ArchConfig(
+    name="deepseek-v3-like", family="moe", n_layers=4, d_model=128,
+    n_heads=8, n_kv_heads=4, d_ff=256, vocab=2048, head_dim=16,
+    moe=MoESpec(n_experts=64, top_k=8, d_ff_expert=64), source="bench")
+qwen_like = get_arch("qwen3-moe-30b-a3b").reduced()
+
+def bench_model(cfg):
+    out = {}
+    for engine in ["disagg", "fused_flat", "fused_hier"]:
+        ctx = make_context(cfg, mesh, multi_pod=False, engine=engine,
+                           capacity_factor=2.0, node_size=2)
+        bundle = zoo.build(cfg, ctx)
+        params = bundle.init(jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        step = jax.jit(make_train_step(bundle, adamw.AdamWConfig()))
+        batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, 64)
+        with mesh:
+            p, o, m = step(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            for _ in range(3):
+                p, o, m = step(p, o, batch)
+            jax.block_until_ready(m["loss"])
+            out[f"train_{engine}"] = (time.perf_counter() - t0) / 3
+            # TTFT: prefill latency
+            pf = jax.jit(lambda pp, bb: bundle.prefill(pp, bb, 96))
+            logits, st = pf(params, batch)
+            jax.block_until_ready(logits)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                logits, st = pf(params, batch)
+            jax.block_until_ready(logits)
+            out[f"ttft_{engine}"] = (time.perf_counter() - t0) / 3
+    return out
+
+print(json.dumps({"qwen3_moe_like": bench_model(qwen_like),
+                  "deepseek_like": bench_model(deepseek_like)}))
+"""
+
+
+def run() -> list[tuple[str, float, str]]:
+    res = run_sub(CODE, n_devices=8, timeout=2400)
+    rows = []
+    for model, r in res.items():
+        for k, v in r.items():
+            rows.append((f"e2e/{model}/{k}", v * 1e6, ""))
+        for kind in ("train", "ttft"):
+            rows.append((f"e2e/{model}/{kind}_speedup_hier_vs_disagg",
+                         r[f"{kind}_disagg"] / r[f"{kind}_fused_hier"], "x"))
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig. 5 — dComm slice-pipeline model: slice-size sweep.
+
+Verifies the paper's pipelining claims quantitatively at the paper's own
+hardware point (H100 HBM3 ~3.3 TB/s staging, 400 Gb/s NIC) and at our TPU
+target (819 GB/s HBM, 50 GB/s ICI): staging hides fully once wire time per
+slice exceeds staging time; tiny slices are overhead-bound.
+"""
+
+from __future__ import annotations
+
+from repro.core.pipesim import PipeParams, best_slice, simulate, sweep
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for name, stage_bw, wire_bw in [("paper_h100", 3.3e12, 50e9),
+                                    ("tpu_v5e", 819e9, 50e9)]:
+        p = PipeParams(payload_bytes=32e6, stage_bw=stage_bw, wire_bw=wire_bw)
+        for s in (16 * 1024, 256 * 1024, 4 * 1024 * 1024):
+            r = simulate(p, s)
+            rows.append((f"pipesim/{name}/slice_{s//1024}KiB/efficiency",
+                         r["efficiency"] * 100, "%"))
+        b = best_slice(p)
+        rows.append((f"pipesim/{name}/best_slice", b["slice_bytes"] / 1024, "KiB"))
+        rows.append((f"pipesim/{name}/best_efficiency", b["efficiency"] * 100, "%"))
+        rows.append((f"pipesim/{name}/speedup_vs_unpipelined", b["speedup"], "x"))
+    return rows

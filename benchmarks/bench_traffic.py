@@ -1,0 +1,44 @@
+"""Paper Figs. 7/8/9 — engine latency across traffic patterns and sizes.
+
+Stage breakdown (Fig. 7 bars): preprocessing = planner descriptor
+construction alone; rearrangement = the disaggregated engine's extra
+sort/pack passes (fused engines: 0 by construction); communication+compute =
+remainder of the full pipeline.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import PREAMBLE, run_sub
+
+CODE = PREAMBLE + """
+results = {}
+for pattern in ["real_world", "single_node", "imbalanced"]:
+    for T in [256, 1024]:
+        row = {}
+        x, A, g, w1, w3, w2 = inputs(pattern, T)
+        for engine in ["disagg", "fused_flat", "fused_hier"]:
+            f = jax.jit(engine_fn(engine, T))
+            row[engine] = timeit(f, x, A, g, w1, w3, w2)
+        # preprocessing stage: descriptor construction only
+        def plan_only(A, g):
+            return planner.build_flat_plan(A, g, placement, 64).slots.slot
+        pf = shard_map(plan_only, mesh=mesh, in_specs=(P("model"), P("model")),
+                       out_specs=P("model"), check_vma=False)
+        row["preprocess"] = timeit(jax.jit(pf), A, g)
+        results[f"{pattern}/T{T}"] = row
+print(json.dumps(results))
+"""
+
+
+def run() -> list[tuple[str, float, str]]:
+    res = run_sub(CODE, timeout=1800)
+    rows = []
+    for key, r in res.items():
+        for eng in ("disagg", "fused_flat", "fused_hier"):
+            rows.append((f"traffic/{key}/{eng}", r[eng] * 1e6, ""))
+        rows.append((f"traffic/{key}/preprocess", r["preprocess"] * 1e6, ""))
+        rows.append((f"traffic/{key}/speedup_flat_vs_disagg",
+                     r["disagg"] / r["fused_flat"], "x"))
+        rows.append((f"traffic/{key}/speedup_hier_vs_disagg",
+                     r["disagg"] / r["fused_hier"], "x"))
+    return rows

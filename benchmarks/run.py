@@ -1,0 +1,48 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only traffic,ablation,...]``
+prints ``name,us_per_call,derived`` CSV (plus unit annotations).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: traffic,ablation,breakdown,e2e")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation, bench_breakdown, bench_e2e,
+                            bench_pipeline, bench_traffic)
+    suites = {
+        "breakdown": bench_breakdown,   # Table 1
+        "traffic": bench_traffic,       # Figs 7/8/9
+        "ablation": bench_ablation,     # Table 3
+        "e2e": bench_e2e,               # Fig 11
+        "pipeline": bench_pipeline,     # Fig 5 (slice pipelining model)
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites.items():
+        try:
+            for row_name, value, unit in mod.run():
+                print(f"{row_name},{value:.2f},{unit}")
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example: prefill (FUSCO engine in the dispatch path) +
+greedy decode for a batch of requests, reporting TTFT and per-token latency.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "qwen3-moe-30b-a3b", "--reduced",
+                "--engine", "fused_hier", "--requests", "16",
+                "--prompt-len", "64", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-param MoE LM for a few hundred steps.
+
+Uses the full stack — FUSCO fused_hier dispatch, AdamW with f32 master
+weights, fault-tolerant loop with async checkpoints, deterministic Zipf
+2-gram data — and prints the loss curve.
+
+Run:  PYTHONPATH=src python examples/train_moe.py [--steps 300]
+(On this 1-core CPU container ~300 steps ≈ 10–20 min; use --steps 30 for a
+quick pass.)
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+
+from repro.configs.base import ArchConfig, MoESpec
+from repro.launch import train as train_mod
+from repro.configs import _MODULES  # noqa: F401 (registry import side effect)
+
+
+# ~100M params: 8L, d=384, 32 experts (f_e=512) top-2, 16k vocab
+MOE_100M = ArchConfig(
+    name="moe-100m", family="moe", n_layers=8, d_model=384, n_heads=8,
+    n_kv_heads=4, d_ff=1024, vocab=16384, head_dim=48, qk_norm=True,
+    moe=MoESpec(n_experts=32, top_k=2, d_ff_expert=512), source="example")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    # register the example config under a temporary name
+    import repro.configs as cfgs
+    import types
+    mod = types.ModuleType("repro.configs.moe_100m")
+    mod.ARCH = MOE_100M
+    sys.modules["repro.configs.moe_100m"] = mod
+    cfgs._MODULES["moe-100m"] = "moe_100m"
+
+    from repro.launch.roofline import count_matmul_params
+    n = count_matmul_params(MOE_100M) + MOE_100M.vocab * MOE_100M.d_model \
+        + MOE_100M.n_layers * MOE_100M.moe.n_experts * 3 \
+        * MOE_100M.d_model * MOE_100M.moe.d_ff_expert
+    print(f"model: ~{n/1e6:.0f}M params")
+    train_mod.main([
+        "--arch", "moe-100m", "--engine", "fused_hier",
+        "--steps", str(args.steps), "--seq", str(args.seq),
+        "--batch", str(args.batch), "--ckpt-dir", "/tmp/moe100m_ckpt",
+        "--ckpt-every", "100", "--log-every", "10", "--lr", "1e-3",
+    ])
+
+
+if __name__ == "__main__":
+    main()

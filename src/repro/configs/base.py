@@ -1,0 +1,106 @@
+"""Config system: architecture + input-shape + run configs.
+
+Every assigned architecture is a frozen ``ArchConfig`` in its own module
+(``repro/configs/<id>.py``); shapes are the four assigned input shapes.  The
+``reduced()`` method yields the CPU smoke-test variant (same family/topology,
+tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    norm_topk: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmSpec:
+    d_state: int
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    moe: Optional[MoESpec] = None
+    ssm: Optional[SsmSpec] = None
+    window: Optional[int] = None     # sliding-window attention
+    global_layers: Tuple[int, ...] = ()   # hybrid: layers with global attn
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    encoder_layers: int = 0          # enc-dec only
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid") or self.window is not None
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family & wiring, tiny dims."""
+        return dataclasses.replace(
+            self,
+            n_layers=2 if self.encoder_layers == 0 else 2,
+            encoder_layers=min(self.encoder_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=2,
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            window=min(self.window, 16) if self.window else None,
+            global_layers=tuple(g for g in self.global_layers if g < 2) or ((0,) if self.global_layers else ()),
+            moe=dataclasses.replace(self.moe, n_experts=8, top_k=min(self.moe.top_k, 2),
+                                    d_ff_expert=32) if self.moe else None,
+            ssm=dataclasses.replace(self.ssm, d_state=16, head_dim=8, chunk=8)
+            if self.ssm else None,
+            mrope_sections=(2, 3, 3) if self.mrope_sections else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; else the documented reason."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "full-attention arch: O(T^2) at 524k — skipped per spec"
+    return True, ""

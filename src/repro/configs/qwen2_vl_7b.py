@@ -1,0 +1,8 @@
+from repro.configs.base import ArchConfig
+
+# M-RoPE backbone; vision frontend is a STUB — input_specs() provides patch
+# embeddings + 3D position ids (DESIGN.md §5).
+ARCH = ArchConfig(
+    name="qwen2-vl-7b", family="vlm", n_layers=28, d_model=3584, n_heads=28,
+    n_kv_heads=4, d_ff=18944, vocab=152064, head_dim=128, rope_theta=1e6,
+    mrope_sections=(16, 24, 24), source="arXiv:2409.12191; hf")

@@ -1,0 +1,8 @@
+from repro.configs.base import ArchConfig
+
+# enc-dec: 24 encoder + 24 decoder layers; audio frontend is a STUB —
+# input_specs() provides precomputed frame embeddings (DESIGN.md §5).
+ARCH = ArchConfig(
+    name="seamless-m4t-large-v2", family="encdec", n_layers=24,
+    encoder_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab=256206, rope_theta=1e4, source="arXiv:2308.11596; hf")

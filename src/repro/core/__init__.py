@@ -1,0 +1,14 @@
+"""FUSCO core — transformation-communication fusion for MoE shuffling.
+
+Public surface:
+  routing      — top-k router, token-expert (A) / token-node (B) matrices
+  descriptors  — segment-descriptor slot tables (fixed-width token adaptation)
+  planner      — two-level communication plans (node-level + expert-level)
+  balancer     — Online Load Balancer (paper Algorithm 1)
+  dcomm        — the Data-Fused Communication Engine (4 wire engines)
+  fusco        — drop-in MoE shuffle+FFN API and the dense oracle
+"""
+
+from repro.core.dcomm import DcommConfig  # noqa: F401
+from repro.core.routing import ExpertPlacement  # noqa: F401
+from repro.core.fusco import moe_shuffle_ffn, dense_moe_reference  # noqa: F401

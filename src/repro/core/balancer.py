@@ -1,0 +1,97 @@
+"""Online Load Balancer — the paper's Algorithm 1, verbatim.
+
+Given per-GPU cross-node send loads L (shape (n_nodes, m_per_node)), partition
+GPUs into ``m_per_node`` *communication groups*, each containing exactly one
+GPU from every node, minimising the maximum group load (max–min combinatorial
+problem; exhaustive space is O((M!)^N)).
+
+Algorithm 1 (greedy, fully node-local):
+  1. per node: sort local GPUs by load, descending → permutation P_n
+  2. circularly rotate P_n by n positions → S_n
+  3. group g_i = { S_n[i] : for every node n }
+
+Because each node's sorted permutation is shifted by a unique offset, the
+highest-load GPU of each node lands in a *different* group.  Cost O(M log M)
+per node, no cross-node coordination.
+
+On TPU the "GPU within a node" is an expert-parallel lane within a pod (or
+virtual node); the group id chosen for a lane determines which *forwarder lane*
+carries its cross-node traffic (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+
+
+def algorithm1_groups(loads: jax.Array) -> jax.Array:
+    """Greedy group assignment.
+
+    Args:
+      loads: (n_nodes, m) per-GPU cross-node send volume.
+    Returns:
+      assignment: (n_nodes, m) int32 — ``assignment[n, j]`` is the group id of
+      GPU j of node n. Row n is a permutation of [0, m).
+    """
+    n_nodes, m = loads.shape
+    # 1. sort descending: P_n[i] = index of i-th largest-load GPU in node n
+    perm = jnp.argsort(-loads, axis=1, stable=True)            # (n, m): rank -> gpu
+    # 2. circular shift by node index: S_n[i] = P_n[(i - n) mod m]
+    ranks = jnp.arange(m, dtype=I32)[None, :]                   # (1, m)
+    node_ids = jnp.arange(n_nodes, dtype=I32)[:, None]          # (n, 1)
+    shifted_rank = (ranks - node_ids) % m                       # position in P_n
+    s = jnp.take_along_axis(perm, shifted_rank, axis=1)         # S_n: group -> gpu
+    # 3. invert: assignment[n, gpu] = group index
+    assignment = jnp.zeros((n_nodes, m), I32)
+    assignment = assignment.at[node_ids, s].set(ranks * jnp.ones((n_nodes, 1), I32))
+    return assignment
+
+
+def group_loads(loads: jax.Array, assignment: jax.Array) -> jax.Array:
+    """Total load per group under an assignment."""
+    n_nodes, m = loads.shape
+    out = jnp.zeros((m,), loads.dtype)
+    return out.at[assignment.reshape(-1)].add(loads.reshape(-1))
+
+
+def max_group_load(loads: jax.Array, assignment: jax.Array) -> jax.Array:
+    return jnp.max(group_loads(loads, assignment))
+
+
+def static_assignment(n_nodes: int, m: int) -> jax.Array:
+    """The balancer-off baseline of §5.4: group GPUs by identical local index."""
+    return jnp.tile(jnp.arange(m, dtype=I32)[None, :], (n_nodes, 1))
+
+
+def brute_force_assignment(loads: np.ndarray) -> tuple[np.ndarray, float]:
+    """Exact optimum by exhaustive search — test oracle only (tiny sizes)."""
+    n_nodes, m = loads.shape
+    best, best_load = None, float("inf")
+    for perms in itertools.product(itertools.permutations(range(m)), repeat=n_nodes - 1):
+        assignment = np.zeros((n_nodes, m), np.int32)
+        assignment[0] = np.arange(m)
+        for n, p in enumerate(perms, start=1):
+            assignment[n, list(p)] = np.arange(m)
+        g = np.zeros(m)
+        for n in range(n_nodes):
+            for j in range(m):
+                g[assignment[n, j]] += loads[n, j]
+        if g.max() < best_load:
+            best, best_load = assignment, float(g.max())
+    return best, best_load
+
+
+def forwarder_lane(assignment: jax.Array, my_node: int | jax.Array,
+                   my_lane: int | jax.Array, dst_node: jax.Array) -> jax.Array:
+    """Which lane in ``dst_node`` serves as forwarder for traffic from
+    (my_node, my_lane): the dst-node member of my communication group."""
+    group = assignment[my_node, my_lane]
+    # member of `group` in dst_node = lane j with assignment[dst_node, j] == group
+    inv = jnp.argsort(assignment, axis=1)          # (n, m): group -> lane
+    return inv[dst_node, group]

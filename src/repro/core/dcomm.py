@@ -1,0 +1,376 @@
+"""dComm — the Data-Fused Communication Engine (paper §3.2), TPU-native.
+
+Four interchangeable wire engines, all driven by the same planner descriptors:
+
+``fused_flat``
+    Single-level fused shuffle.  ONE descriptor-driven gather stages tokens
+    straight from their original layout into the communication buffer, laid
+    out in (destination lane × local-expert × capacity) sub-slots so the tiled
+    ``all_to_all`` lands every token **already expert-grouped** on the
+    receiver — the expert FFN consumes the landed buffer in place, and the
+    combine path scatter-adds straight back into the original token layout.
+    Zero intermediate permutation passes (the paper's dComm property).
+
+``fused_hier``
+    Two-level plan on top of the same fusion: node-level forwarding with
+    dedup (one copy per token per destination node, forwarder lane picked by
+    the Online Load Balancer) + expert-level distribution built on the
+    forwarder from piggybacked metadata, including intra-node expansion.
+    Combine pre-reduces per-node partials on the forwarder, so the slow tier
+    carries deduplicated bytes in *both* directions.
+
+``disagg``
+    The disaggregated baseline the paper profiles (§2.3): sort-by-destination
+    pass → all-to-all → sort-by-expert pass → FFN → inverse sequence.  Each
+    sort is a materialised permutation, exactly like the NCCL-based pipeline.
+
+``ragged``
+    The TPU production path: ``jax.lax.ragged_all_to_all`` whose offset/size
+    operands *are* sender/receiver segment descriptors (no capacity padding).
+    XLA:CPU cannot compile ragged-all-to-all, so this engine is exercised on
+    real TPUs only; its descriptor construction is unit-tested on CPU.
+
+All entry points run **inside shard_map** over the expert-parallel axis/axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner as planner_lib
+from repro.core.descriptors import drop_neg, gather_rows
+from repro.core.routing import ExpertPlacement
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class DcommConfig:
+    """Static configuration of the shuffle engine."""
+    engine: str = "fused_hier"            # fused_flat | fused_hier | disagg | ragged
+    ep_axis: Any = "model"                # axis name, or (pod_axis, model_axis)
+    node_size: int = 4                    # lanes per (virtual) node; multi-pod: =model size
+    capacity_factor: float = 2.0
+    use_balancer: bool = True             # Online Load Balancer on/off (§5.4)
+
+    @property
+    def model_axis(self) -> str:
+        return self.ep_axis[-1] if isinstance(self.ep_axis, (tuple, list)) else self.ep_axis
+
+    @property
+    def pod_axis(self) -> str | None:
+        return self.ep_axis[0] if isinstance(self.ep_axis, (tuple, list)) else None
+
+
+def _cap(n_expected: float, factor: float, align: int = 8) -> int:
+    c = max(align, int(-(-n_expected * factor // align)) * align)
+    return c
+
+
+def _lane_index(cfg: DcommConfig, placement: ExpertPlacement) -> jax.Array:
+    m = jax.lax.axis_index(cfg.model_axis)
+    if cfg.pod_axis is not None:
+        p = jax.lax.axis_index(cfg.pod_axis)
+        return p * (placement.ep // jax.lax.axis_size(cfg.pod_axis)) + m
+    return m
+
+
+def _node_groups(ep: int, node_size: int) -> list[list[int]]:
+    return [list(range(n * node_size, (n + 1) * node_size))
+            for n in range(ep // node_size)]
+
+
+class DispatchResult(NamedTuple):
+    """What the expert FFN consumes: a landed buffer already grouped by local
+    expert, plus everything combine() needs to route outputs home."""
+    expert_rows: jax.Array      # (S, E_local, C, d) rows for this lane's experts
+    row_gates: jax.Array | None  # (S, E_local, C) gates (hier) or None (flat)
+    state: Any                  # engine-private
+
+
+# ======================================================================
+# fused_flat
+# ======================================================================
+
+def flat_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
+                  placement: ExpertPlacement, cfg: DcommConfig) -> DispatchResult:
+    t, d = x.shape
+    k = A.shape[1]
+    e_local = placement.experts_per_lane
+    cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
+    plan = planner_lib.build_flat_plan(A, gates, placement, cap)
+
+    # ONE fused gather: original layout -> comm buffer (EP, E_local*C, d)
+    buf = gather_rows(x, plan.src_of_slot)                   # (EP*E_local*C, d)
+    buf = buf.reshape(placement.ep, e_local * cap, d)
+    if cfg.pod_axis is not None:
+        npod = jax.lax.axis_size(cfg.pod_axis)
+        buf = buf.reshape(npod, placement.ep // npod, e_local * cap, d)
+        buf = jax.lax.all_to_all(buf, cfg.model_axis, 1, 1, tiled=True)
+        buf = jax.lax.all_to_all(buf, cfg.pod_axis, 0, 0, tiled=True)
+        buf = buf.reshape(placement.ep, e_local * cap, d)
+    else:
+        buf = jax.lax.all_to_all(buf, cfg.model_axis, 0, 0, tiled=True)
+    # landed layout: (source lane, E_local, C, d) — expert-grouped already.
+    expert_rows = buf.reshape(placement.ep, e_local, cap, d)
+    return DispatchResult(expert_rows, None, (plan, t, d, cap))
+
+
+def flat_combine(expert_out: jax.Array, res: DispatchResult,
+                 placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    plan, t, d, cap = res.state
+    e_local = placement.experts_per_lane
+    buf = expert_out.reshape(placement.ep, e_local * cap, d)
+    if cfg.pod_axis is not None:
+        npod = jax.lax.axis_size(cfg.pod_axis)
+        buf = buf.reshape(npod, placement.ep // npod, e_local * cap, d)
+        buf = jax.lax.all_to_all(buf, cfg.pod_axis, 0, 0, tiled=True)
+        buf = jax.lax.all_to_all(buf, cfg.model_axis, 1, 1, tiled=True)
+        buf = buf.reshape(placement.ep * e_local * cap, d)
+    else:
+        buf = jax.lax.all_to_all(buf, cfg.model_axis, 0, 0, tiled=True)
+        buf = buf.reshape(placement.ep * e_local * cap, d)
+    # fused weighted scatter-add straight into the original token layout
+    w = plan.gate_of_slot[:, None].astype(buf.dtype)
+    y = jnp.zeros((t, d), buf.dtype).at[drop_neg(plan.src_of_slot, t)].add(
+        buf * w, mode="drop")
+    return y
+
+
+# ======================================================================
+# fused_hier
+# ======================================================================
+
+def hier_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
+                  placement: ExpertPlacement, cfg: DcommConfig,
+                  assignment: jax.Array | None = None) -> DispatchResult:
+    t, d = x.shape
+    k = A.shape[1]
+    e_local = placement.experts_per_lane
+    ns, n_nodes = placement.node_size, placement.n_nodes
+    # expected rows per destination *rank* at stage 1: distinct nodes per token
+    # <= min(k, n_nodes); conservative envelope k.
+    c1 = _cap(t * min(k, n_nodes) / placement.ep, cfg.capacity_factor)
+    c2 = _cap(t * k * ns / (placement.ep * ns * e_local), cfg.capacity_factor)
+
+    my_lane = _lane_index(cfg, placement)
+    plan1 = planner_lib.build_hier_plan(A, gates, placement, c1, my_lane, assignment)
+
+    # ---- stage 1: node-level forwarding (dedup, slow tier) -----------------
+    buf1 = gather_rows(x, plan1.src_of_slot)                 # (EP*C1, d)
+    me = plan1.meta_expert                                   # (EP*C1, K)
+    mg = plan1.meta_gate
+    if cfg.pod_axis is not None:
+        npod = jax.lax.axis_size(cfg.pod_axis)
+
+        def _ex(v):
+            v = v.reshape((npod, placement.ep // npod, c1) + v.shape[2:])
+            v = jax.lax.all_to_all(v, cfg.model_axis, 1, 1, tiled=True)
+            v = jax.lax.all_to_all(v, cfg.pod_axis, 0, 0, tiled=True)
+            return v.reshape((placement.ep * c1,) + v.shape[3:])
+    else:
+        def _ex(v):
+            v = v.reshape((placement.ep, c1) + v.shape[2:])
+            v = jax.lax.all_to_all(v, cfg.model_axis, 0, 0, tiled=True)
+            return v.reshape((placement.ep * c1,) + v.shape[2:])
+
+    buf1 = _ex(buf1.reshape(placement.ep, c1, d))
+    me = _ex(me.reshape(placement.ep, c1, k))
+    mg = _ex(mg.reshape(placement.ep, c1, k))
+
+    # ---- stage 2: expert-level distribution (fast tier, expansion) ---------
+    plan2 = planner_lib.build_stage2_plan(me, mg, ns, e_local, c2)
+    buf2 = gather_rows(buf1, plan2.src_of_slot)              # (ns*E_local*C2, d)
+    g2 = plan2.gate_of_slot                                  # (ns*E_local*C2,)
+
+    groups = None
+    if cfg.pod_axis is None and ns != placement.ep:
+        groups = _node_groups(placement.ep, ns)
+    buf2 = buf2.reshape(ns, e_local * c2, d)
+    g2 = g2.reshape(ns, e_local * c2)
+    buf2 = jax.lax.all_to_all(buf2, cfg.model_axis, 0, 0, tiled=True,
+                              axis_index_groups=groups)
+    g2 = jax.lax.all_to_all(g2, cfg.model_axis, 0, 0, tiled=True,
+                            axis_index_groups=groups)
+    expert_rows = buf2.reshape(ns, e_local, c2, d)
+    row_gates = g2.reshape(ns, e_local, c2)
+    return DispatchResult(expert_rows, row_gates,
+                          (plan1, plan2, t, d, c1, c2, groups))
+
+
+def hier_combine(expert_out: jax.Array, res: DispatchResult,
+                 placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    plan1, plan2, t, d, c1, c2, groups = res.state
+    e_local = placement.experts_per_lane
+    ns = placement.node_size
+    # gate on the expert lane, then return over the fast tier
+    out = expert_out * res.row_gates[..., None].astype(expert_out.dtype)
+    out = out.reshape(ns, e_local * c2, d)
+    out = jax.lax.all_to_all(out, cfg.model_axis, 0, 0, tiled=True,
+                             axis_index_groups=groups)
+    out = out.reshape(ns * e_local * c2, d)
+    # forwarder pre-combine: sum this node's expert partials per stage-1 row
+    part = jnp.zeros((placement.ep * c1, d), out.dtype).at[
+        drop_neg(plan2.src_of_slot, placement.ep * c1)].add(out, mode="drop")
+    # return over the slow tier (deduplicated bytes both directions)
+    if cfg.pod_axis is not None:
+        npod = jax.lax.axis_size(cfg.pod_axis)
+        part = part.reshape(npod, placement.ep // npod, c1, d)
+        part = jax.lax.all_to_all(part, cfg.pod_axis, 0, 0, tiled=True)
+        part = jax.lax.all_to_all(part, cfg.model_axis, 1, 1, tiled=True)
+        part = part.reshape(placement.ep * c1, d)
+    else:
+        part = part.reshape(placement.ep, c1, d)
+        part = jax.lax.all_to_all(part, cfg.model_axis, 0, 0, tiled=True)
+        part = part.reshape(placement.ep * c1, d)
+    # origin: per-node partials land in my stage-1 slots; gates were applied
+    # at the expert, dedup handled by the forwarder pre-combine.
+    y = jnp.zeros((t, d), part.dtype).at[
+        drop_neg(plan1.src_of_slot, t)].add(part, mode="drop")
+    return y
+
+
+# ======================================================================
+# disagg — the paper's §2.3 baseline (materialised sort passes)
+# ======================================================================
+
+def disagg_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
+                    placement: ExpertPlacement, cfg: DcommConfig) -> DispatchResult:
+    t, d = x.shape
+    k = A.shape[1]
+    e_local = placement.experts_per_lane
+    cap_lane = _cap(t * k / placement.ep, cfg.capacity_factor)
+    cap_e = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
+
+    from repro.core.routing import balanced_replica_choice
+    replica = balanced_replica_choice(A, placement)
+    lane = placement.lane_of_expert(A, replica).reshape(-1)      # (T*K,)
+    eloc = placement.local_expert_index(A).reshape(-1)
+    tok = jnp.broadcast_to(jnp.arange(t, dtype=I32)[:, None], A.shape).reshape(-1)
+
+    # pass 1: materialised sort-by-destination-rank (the pre-a2a permutation)
+    order = jnp.argsort(lane, stable=True)
+    xs = jnp.take(x, jnp.take(tok, order), axis=0)               # (T*K, d) pass
+    lane_s, eloc_s = jnp.take(lane, order), jnp.take(eloc, order)
+
+    # pass 2: pack into per-lane capacity buffer (device-major layout)
+    from repro.core.descriptors import build_slot_table
+    st = build_slot_table(lane_s, placement.ep, cap_lane)
+    inv = jnp.full((placement.ep * cap_lane,), -1, I32).at[
+        drop_neg(st.slot, placement.ep * cap_lane)].set(
+        jnp.arange(t * k, dtype=I32), mode="drop")
+    buf = gather_rows(xs, inv)                                   # (EP*cap, d) pass
+    meta = jnp.full((placement.ep * cap_lane,), -1, I32).at[
+        drop_neg(st.slot, placement.ep * cap_lane)].set(eloc_s, mode="drop")
+
+    buf = jax.lax.all_to_all(buf.reshape(placement.ep, cap_lane, d),
+                             cfg.model_axis, 0, 0, tiled=True)
+    meta = jax.lax.all_to_all(meta.reshape(placement.ep, cap_lane),
+                              cfg.model_axis, 0, 0, tiled=True)
+    buf = buf.reshape(placement.ep * cap_lane, d)
+    meta = meta.reshape(placement.ep * cap_lane)
+
+    # pass 3: receiver-side materialised sort-by-expert + repack
+    order2 = jnp.argsort(jnp.where(meta >= 0, meta, e_local), stable=True)
+    xr = jnp.take(buf, order2, axis=0)                           # pass
+    meta_r = jnp.take(meta, order2)
+    st2 = build_slot_table(meta_r, e_local, cap_e * placement.ep)
+    inv2 = jnp.full((e_local * cap_e * placement.ep,), -1, I32).at[
+        drop_neg(st2.slot, e_local * cap_e * placement.ep)].set(
+        jnp.arange(meta_r.shape[0], dtype=I32), mode="drop")
+    ebuf = gather_rows(xr, inv2).reshape(1, e_local, cap_e * placement.ep, d)
+    state = (order, st, order2, st2, inv2, t, d, k, cap_lane, cap_e)
+    return DispatchResult(ebuf, None, state)
+
+
+def disagg_combine(expert_out: jax.Array, res: DispatchResult,
+                   placement: ExpertPlacement, cfg: DcommConfig,
+                   gates: jax.Array) -> jax.Array:
+    order, st, order2, st2, inv2, t, d, k, cap_lane, cap_e = res.state
+    e_local = placement.experts_per_lane
+    flat = expert_out.reshape(e_local * cap_e * placement.ep, d)
+    # inverse pass 3: sorted row i lives at expert-buffer slot st2.slot[i] and
+    # came from receive-buffer row order2[i]
+    vals = jnp.where((st2.slot >= 0)[:, None],
+                     jnp.take(flat, jnp.maximum(st2.slot, 0), axis=0), 0)
+    back = jnp.zeros((placement.ep * cap_lane, d), flat.dtype).at[order2].add(vals)
+    back = jax.lax.all_to_all(back.reshape(placement.ep, cap_lane, d),
+                              cfg.model_axis, 0, 0, tiled=True)
+    back = back.reshape(placement.ep * cap_lane, d)
+    # inverse passes 2+1: unpack, unsort, weighted combine
+    srt = gather_rows(back, st.slot)                             # (T*K, d) sorted order
+    unsrt = jnp.zeros((t * k, d), srt.dtype).at[order].set(srt)  # pass
+    w = gates.reshape(-1, 1).astype(unsrt.dtype)
+    y = (unsrt * w).reshape(t, k, d).sum(axis=1)
+    return y
+
+
+# ======================================================================
+# ragged — TPU production engine (true FUSCO descriptor semantics)
+# ======================================================================
+
+def build_ragged_descriptors(plan: planner_lib.FlatPlan,
+                             placement: ExpertPlacement, cap: int):
+    """Sender-side ragged_all_to_all descriptors from a flat plan.
+
+    Returns (compact_src, input_offsets, send_sizes):
+      * ``compact_src``  — (R,) source token row per COMPACT send-buffer row
+        (dense slot layout squeezed; -1 tail padding).  This is the sender
+        segment-descriptor list of the paper: row i of the wire buffer is
+        token ``compact_src[i]``.
+      * ``input_offsets``/``send_sizes`` — per destination lane, the classic
+        (address, size) pair over the compact buffer.
+
+    The receiver-side placement (``output_offsets``) is the receiver's
+    cumulative layout, exchanged with the counts at runtime — the paper's
+    receiver descriptor, named by the sender (§3.2).
+    """
+    e_local = placement.experts_per_lane
+    counts = jnp.minimum(plan.slots.counts.reshape(placement.ep, e_local), cap)
+    send_sizes = counts.sum(axis=1).astype(I32)                 # (EP,)
+    input_offsets = jnp.concatenate(
+        [jnp.zeros((1,), I32), jnp.cumsum(send_sizes)[:-1].astype(I32)])
+    # squeeze the dense slot table into wire order (group-major, no padding)
+    occupied = plan.src_of_slot >= 0
+    order = jnp.argsort(~occupied, stable=True)                 # occupied first
+    # rows stay in slot order within the occupied prefix because argsort is
+    # stable — exactly (lane-major, expert-major, arrival-order)
+    compact_src = jnp.where(
+        jnp.arange(order.shape[0]) < occupied.sum(),
+        jnp.take(plan.src_of_slot, order), -1).astype(I32)
+    return compact_src, input_offsets, send_sizes
+
+
+def ragged_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
+                    placement: ExpertPlacement, cfg: DcommConfig) -> DispatchResult:
+    """True ragged engine: no capacity padding on the wire.  TPU-only — the
+    dry-run verified XLA:CPU rejects ragged-all-to-all (ThunkEmitter), so CPU
+    tests exercise :func:`build_ragged_descriptors` structurally."""
+    t, d = x.shape
+    k = A.shape[1]
+    e_local = placement.experts_per_lane
+    cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
+    plan = planner_lib.build_flat_plan(A, gates, placement, cap)
+    compact_src, offs, send_sizes = build_ragged_descriptors(plan, placement, cap)
+
+    send_buf = gather_rows(x, compact_src)                      # fused stage copy
+    # exchange counts, derive receiver placement (paper: sender names the
+    # receiver offsets — they are the receiver's cumulative layout)
+    recv_sizes = jax.lax.all_to_all(
+        send_sizes.reshape(placement.ep, 1), cfg.model_axis, 0, 0,
+        tiled=True).reshape(placement.ep)
+    recv_offs = jnp.concatenate([jnp.zeros((1,), I32),
+                                 jnp.cumsum(recv_sizes)[:-1].astype(I32)])
+    out_offsets = jax.lax.all_to_all(
+        recv_offs.reshape(placement.ep, 1), cfg.model_axis, 0, 0,
+        tiled=True).reshape(placement.ep)
+    out_buf = jnp.zeros((placement.ep * e_local * cap, d), x.dtype)
+    landed = jax.lax.ragged_all_to_all(
+        send_buf, out_buf, offs, send_sizes, out_offsets, recv_sizes,
+        axis_name=cfg.model_axis)
+    return DispatchResult(landed.reshape(1, 1, placement.ep * e_local * cap, d),
+                          None, (plan, t, d, cap, send_sizes, recv_sizes))

@@ -1,0 +1,124 @@
+"""Segment descriptors — FUSCO's core abstraction, adapted to fixed-width tokens.
+
+The paper's segment descriptor records ``(memory address, size in bytes)`` for
+each logical segment on both the sender and the receiver, so that an arbitrary
+layout transformation can ride along the copy path (paper §3.2, Fig. 4).
+
+On TPU every segment is a fixed-width token row, so a descriptor collapses to a
+row index; a *descriptor list* becomes an int32 slot table that maps each
+(token, k) routing assignment to its position in a communication buffer.  The
+byte-level view of the paper is recoverable as ``(row * row_bytes, row_bytes)``
+— see :func:`as_byte_descriptors`, which exists so tests can check the
+abstraction is faithful.
+
+Everything here is pure, statically-shaped jnp — usable inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def positions_within_groups(keys: jax.Array) -> jax.Array:
+    """For each element, its 0-based rank among elements with the same key,
+    in original order.  Negative keys participate like any other key; callers
+    mask them out afterwards.  O(N log N) via one stable sort.
+    """
+    n = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    sk = jnp.take(keys, order)
+    idx = jnp.arange(n, dtype=I32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]]) if n > 1 else jnp.ones((n,), jnp.bool_)
+    starts = jax.lax.cummax(jnp.where(is_start, idx, I32(-1)))
+    pos_sorted = idx - starts
+    return jnp.zeros((n,), I32).at[order].set(pos_sorted)
+
+
+def group_counts(keys: jax.Array, num_groups: int) -> jax.Array:
+    """Histogram of ``keys`` over [0, num_groups); negative keys ignored."""
+    valid = keys >= 0
+    safe = jnp.where(valid, keys, 0)
+    return jnp.zeros((num_groups,), I32).at[safe].add(valid.astype(I32))
+
+
+def drop_neg(idx: jax.Array, n: int) -> jax.Array:
+    """Map -1 sentinels to an out-of-bounds index.  JAX treats negative
+    indices as wrap-around even under mode='drop'/'fill', so -1 must be
+    rewritten to >= n to actually drop/fill."""
+    return jnp.where(idx < 0, n, idx).astype(I32)
+
+
+class SlotTable(NamedTuple):
+    """A descriptor list for one communication buffer.
+
+    ``slot[t, k]``  — flat row index in the (groups × capacity) buffer where the
+                      payload for routing assignment (t, k) is placed; -1 when
+                      the assignment is dropped (capacity overflow) or merged
+                      (dedup; the surviving copy holds the slot).
+    ``counts[g]``   — valid rows per group (pre-clip, so overflow is observable).
+    ``capacity``    — rows per group (static).
+    ``num_groups``  — number of groups (static).
+    """
+
+    slot: jax.Array
+    counts: jax.Array
+    capacity: int
+    num_groups: int
+
+    @property
+    def total_rows(self) -> int:
+        return self.capacity * self.num_groups
+
+    def dropped(self) -> jax.Array:
+        """Number of assignments that overflowed capacity (monitoring)."""
+        return jnp.sum(jnp.maximum(self.counts - self.capacity, 0))
+
+
+def build_slot_table(keys: jax.Array, num_groups: int, capacity: int,
+                     valid: jax.Array | None = None) -> SlotTable:
+    """Assign each element a slot ``key * capacity + rank`` with overflow → -1.
+
+    ``keys``: any shape, int32 group ids in [0, num_groups) or -1 for inactive.
+    """
+    shape = keys.shape
+    flat = keys.reshape(-1)
+    if valid is not None:
+        flat = jnp.where(valid.reshape(-1), flat, -1)
+    pos = positions_within_groups(flat)
+    ok = (flat >= 0) & (pos < capacity)
+    slot = jnp.where(ok, flat * capacity + pos, -1).astype(I32)
+    counts = group_counts(flat, num_groups)
+    return SlotTable(slot.reshape(shape), counts, capacity, num_groups)
+
+
+def scatter_rows(rows: jax.Array, slot: jax.Array, total_rows: int) -> jax.Array:
+    """Place ``rows[i]`` at buffer row ``slot[i]`` (−1 dropped). One fused pass —
+    this is the dispatch-side descriptor interpretation (sender gather of the
+    paper, expressed as a scatter into the staging buffer)."""
+    out = jnp.zeros((total_rows,) + rows.shape[1:], rows.dtype)
+    return out.at[drop_neg(slot, total_rows)].set(rows, mode="drop")
+
+
+def scatter_add_rows(rows: jax.Array, slot: jax.Array, total_rows: int) -> jax.Array:
+    out = jnp.zeros((total_rows,) + rows.shape[1:], rows.dtype)
+    return out.at[drop_neg(slot, total_rows)].add(rows, mode="drop")
+
+
+def gather_rows(buf: jax.Array, slot: jax.Array, fill: float = 0.0) -> jax.Array:
+    """Read buffer rows back through the descriptor table (−1 → ``fill``).
+    Combine-side descriptor interpretation."""
+    return buf.at[drop_neg(slot, buf.shape[0])].get(
+        mode="fill", fill_value=fill)
+
+
+def as_byte_descriptors(slot: jax.Array, row_bytes: int):
+    """The paper's (address, size) view of a slot table — for tests/docs only."""
+    addr = jnp.where(slot >= 0, slot * row_bytes, -1)
+    size = jnp.where(slot >= 0, row_bytes, 0)
+    return addr, size

@@ -1,0 +1,98 @@
+"""FUSCO public API — drop-in MoE shuffle + expert compute.
+
+The integration surface the paper describes (§4: "a thin adaptation layer
+bridges the framework's token-routing path with our planner and dComm
+primitive"): a model layer calls :func:`moe_shuffle_ffn` inside a shard_map
+over the expert-parallel axis and gets back combined expert outputs in the
+original token layout.  Engine choice, hierarchy and balancer are config.
+
+Also provides :func:`dense_moe_reference` — the per-token dense oracle used by
+tests to validate every engine bit-for-bit (up to dtype tolerance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dcomm
+from repro.core.dcomm import DcommConfig, DispatchResult
+from repro.core.routing import (ExpertPlacement, router_logits, top_k_routing)
+
+
+def swiglu_experts(rows: jax.Array, w1: jax.Array, w3: jax.Array,
+                   w2: jax.Array) -> jax.Array:
+    """Grouped SwiGLU FFN consuming the landed buffer in place.
+
+    rows: (S, E_local, C, d); w1/w3: (E_local, d, f); w2: (E_local, f, d).
+    The local-expert dimension is a batch dim of the einsum — no data
+    rearrangement is required because dispatch landed rows expert-grouped.
+    """
+    h = jnp.einsum("secd,edf->secf", rows, w1)
+    u = jnp.einsum("secd,edf->secf", rows, w3)
+    a = jax.nn.silu(h) * u
+    return jnp.einsum("secf,efd->secd", a, w2)
+
+
+def dispatch(x, A, gates, placement: ExpertPlacement, cfg: DcommConfig,
+             assignment=None) -> DispatchResult:
+    if cfg.engine == "fused_flat":
+        return dcomm.flat_dispatch(x, A, gates, placement, cfg)
+    if cfg.engine == "fused_hier":
+        return dcomm.hier_dispatch(x, A, gates, placement, cfg,
+                                   assignment if cfg.use_balancer else None)
+    if cfg.engine == "disagg":
+        return dcomm.disagg_dispatch(x, A, gates, placement, cfg)
+    if cfg.engine == "ragged":
+        return dcomm.ragged_dispatch(x, A, gates, placement, cfg)
+    raise ValueError(f"unknown engine {cfg.engine!r}")
+
+
+def combine(expert_out, res: DispatchResult, placement, cfg: DcommConfig,
+            gates=None) -> jax.Array:
+    if cfg.engine == "fused_flat":
+        return dcomm.flat_combine(expert_out, res, placement, cfg)
+    if cfg.engine == "fused_hier":
+        return dcomm.hier_combine(expert_out, res, placement, cfg)
+    if cfg.engine == "disagg":
+        return dcomm.disagg_combine(expert_out, res, placement, cfg, gates)
+    raise ValueError(f"unknown engine {cfg.engine!r}")
+
+
+def moe_shuffle_ffn(x: jax.Array, w_router: jax.Array, w1: jax.Array,
+                    w3: jax.Array, w2: jax.Array, placement: ExpertPlacement,
+                    cfg: DcommConfig, top_k: int,
+                    assignment: jax.Array | None = None,
+                    norm_topk: bool = True) -> jax.Array:
+    """Full fused MoE block: route → dispatch → grouped FFN → combine.
+
+    Runs inside shard_map; ``x`` is this shard's (T_local, d) tokens, weights
+    are this lane's expert slices (E_local, d, f)/(E_local, f, d); the router
+    weight is replicated.
+    """
+    logits = router_logits(x, w_router)
+    A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
+    res = dispatch(x, A, gates.astype(x.dtype), placement, cfg, assignment)
+    out = swiglu_experts(res.expert_rows, w1, w3, w2)
+    return combine(out, res, placement, cfg, gates.astype(x.dtype))
+
+
+def dense_moe_reference(x: jax.Array, w_router: jax.Array, w1_all: jax.Array,
+                        w3_all: jax.Array, w2_all: jax.Array, top_k: int,
+                        norm_topk: bool = True) -> jax.Array:
+    """Oracle: per-token dense evaluation of the selected experts.
+
+    ``w*_all`` hold ALL experts (E, d, f)/(E, f, d).  O(T·K·d·f) — small
+    configs only.
+    """
+    logits = router_logits(x, w_router)
+    A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
+
+    def per_token(xt, experts, g):
+        def per_k(e, w):
+            h = jax.nn.silu(xt @ w1_all[e]) * (xt @ w3_all[e])
+            return w * (h @ w2_all[e])
+        outs = jax.vmap(per_k)(experts, g.astype(xt.dtype))
+        return outs.sum(axis=0)
+
+    return jax.vmap(per_token)(x, A, gates)

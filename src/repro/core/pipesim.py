@@ -1,0 +1,83 @@
+"""Discrete-event model of the dComm slice pipeline (paper §3.2, Fig. 5).
+
+The paper's engine streams a transfer as *slices*: the GPU (producer)
+interprets segment descriptors and stages each slice into the ring buffer;
+the NIC (consumer) streams completed slices.  Two claims to verify
+quantitatively (they shape the TPU adaptation too — XLA's DMA pipelining
+plays the NIC role):
+
+  1. slices amortise per-transfer setup: too-small slices are overhead-bound;
+  2. when wire time per slice ≥ staging time, staging is fully hidden —
+     total ≈ setup + first-slice staging + wire time.
+
+This simulator is used by ``benchmarks/bench_pipeline.py`` to sweep slice
+sizes at the paper's hardware constants and pick the knee, and by tests to
+check the analytic bounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeParams:
+    payload_bytes: float
+    stage_bw: float = 819e9          # descriptor-interpreting copy (HBM)
+    wire_bw: float = 50e9            # NIC / ICI link
+    per_slice_overhead_s: float = 2e-6   # descriptor fetch + doorbell
+    ring_slots: int = 2              # double buffering
+
+
+def simulate(p: PipeParams, slice_bytes: float) -> dict:
+    """Event-driven simulation of producer/consumer over a bounded ring."""
+    n = max(1, int(-(-p.payload_bytes // slice_bytes)))
+    stage_t = slice_bytes / p.stage_bw + p.per_slice_overhead_s
+    wire_t = slice_bytes / p.wire_bw
+
+    # producer can run at most `ring_slots` slices ahead of the consumer
+    stage_done = [0.0] * n
+    wire_done = [0.0] * n
+    t_prod = 0.0
+    for i in range(n):
+        if i >= p.ring_slots:
+            # wait for the slot to free (consumer finished slice i - slots)
+            t_prod = max(t_prod, wire_done[i - p.ring_slots])
+        t_prod += stage_t
+        stage_done[i] = t_prod
+    t_cons = 0.0
+    for i in range(n):
+        t_cons = max(t_cons, stage_done[i]) + wire_t
+        wire_done[i] = t_cons
+
+    total = wire_done[-1]
+    unpipelined = n * stage_t + n * wire_t
+    lower_bound = p.payload_bytes / p.wire_bw     # wire is the floor
+    return {
+        "n_slices": n,
+        "total_s": total,
+        "unpipelined_s": unpipelined,
+        "speedup": unpipelined / total,
+        "wire_bound_s": lower_bound,
+        "efficiency": lower_bound / total,        # 1.0 = staging fully hidden
+    }
+
+
+def sweep(p: PipeParams, slice_sizes) -> list[dict]:
+    out = []
+    for s in slice_sizes:
+        r = simulate(p, s)
+        r["slice_bytes"] = s
+        out.append(r)
+    return out
+
+
+def best_slice(p: PipeParams, lo: float = 4096, hi: float = 2 ** 26) -> dict:
+    """Geometric sweep → the knee (max efficiency, smallest slice on ties)."""
+    sizes = []
+    s = lo
+    while s <= hi:
+        sizes.append(s)
+        s *= 2
+    results = sweep(p, sizes)
+    return max(results, key=lambda r: (round(r["efficiency"], 4), -r["slice_bytes"]))

@@ -1,0 +1,151 @@
+"""Communication Planner — converts router output into descriptor-level plans.
+
+Mirrors paper §3.3: from the token–expert matrix ``A`` (and the token–node
+matrix ``B`` derived under a fixed expert placement) build
+
+  * **flat plan** — single-level fused shuffle (dComm without hierarchical
+    routing): one slot per (token, k) assignment addressed directly to the
+    (lane, local-expert) capacity sub-slot, so the tiled all-to-all lands every
+    token already grouped by expert on the receiver.  No dedup.
+
+  * **hierarchical plan** — two-level: *node-level forwarding descriptors*
+    (one copy per token per destination node, forwarder lane chosen by the
+    Online Load Balancer) and *expert-level distribution descriptors* built on
+    the forwarder from piggybacked metadata (paper's expert-level descriptors).
+
+All functions are per-shard (run inside ``shard_map``), statically shaped.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balancer as balancer_lib
+from repro.core.descriptors import (SlotTable, build_slot_table,
+                                    drop_neg, group_counts)
+from repro.core.routing import ExpertPlacement, balanced_replica_choice, token_node_matrix
+
+I32 = jnp.int32
+
+
+class FlatPlan(NamedTuple):
+    """Single-level fused dispatch plan (per shard)."""
+    slots: SlotTable            # (T, K) -> row in (EP * E_local * C) buffer
+    src_of_slot: jax.Array      # (R,) source token row per buffer row, -1 empty
+    gate_of_slot: jax.Array     # (R,) combine weight per buffer row
+    lane: jax.Array             # (T, K) destination lane (diagnostics / tests)
+
+
+class HierPlan(NamedTuple):
+    """Node-level forwarding plan (per shard, sender side)."""
+    slots: SlotTable            # (T, n_nodes) -> row in (EP * C1) buffer; -1 if
+                                # token not routed to that node (dedup built in)
+    src_of_slot: jax.Array      # (R1,) source token row per stage-1 buffer row
+    meta_expert: jax.Array      # (R1, K) lane_in_node * E_local + e_local, -1 pad
+    meta_gate: jax.Array        # (R1, K) gates aligned with meta_expert
+    dst_rank_load: jax.Array    # (EP,) rows sent to each rank (balancer input)
+
+
+def _inverse_slot(slots: SlotTable, values: jax.Array) -> jax.Array:
+    """Scatter ``values`` (same leading shape as slots.slot) into buffer rows."""
+    flat_slot = drop_neg(slots.slot.reshape(-1), slots.total_rows)
+    flat_val = values.reshape(-1)
+    out = jnp.full((slots.total_rows,), -1, flat_val.dtype)
+    return out.at[flat_slot].set(flat_val, mode="drop")
+
+
+def build_flat_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
+                    capacity: int) -> FlatPlan:
+    """Descriptor construction for the single-level fused engine."""
+    t = A.shape[0]
+    replica = balanced_replica_choice(A, placement)
+    lane = placement.lane_of_expert(A, replica)                  # (T, K)
+    e_local = placement.local_expert_index(A)                    # (T, K)
+    key = lane * placement.experts_per_lane + e_local            # (T, K)
+    slots = build_slot_table(key, placement.ep * placement.experts_per_lane, capacity)
+    token_ids = jnp.broadcast_to(jnp.arange(t, dtype=I32)[:, None], A.shape)
+    src_of_slot = _inverse_slot(slots, token_ids)
+    gate_of_slot = _inverse_slot(slots, gates)
+    gate_of_slot = jnp.where(src_of_slot >= 0, gate_of_slot, 0).astype(gates.dtype)
+    return FlatPlan(slots, src_of_slot, gate_of_slot, lane)
+
+
+def build_hier_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
+                    capacity1: int, my_lane: jax.Array,
+                    assignment: jax.Array | None = None) -> HierPlan:
+    """Node-level forwarding descriptors with dedup (paper §3.3, first level).
+
+    ``assignment`` is the balancer's (n_nodes, node_size) group table; when
+    None, the static balancer-off grouping is used (§5.4).
+    ``my_lane`` is this shard's lane index on the EP axis.
+    """
+    t, k = A.shape
+    n_nodes, ns = placement.n_nodes, placement.node_size
+    replica = balanced_replica_choice(A, placement)
+    lane = placement.lane_of_expert(A, replica)                  # (T, K)
+    e_local = placement.local_expert_index(A)
+    node = placement.node_of_lane(lane)                          # (T, K) == B matrix
+
+    # --- dedup: does token t use node n?  (T, n_nodes) one-hot-of-any ------
+    uses_node = jnp.zeros((t, n_nodes), jnp.bool_).at[
+        jnp.arange(t)[:, None], node].set(True)
+
+    # --- forwarder choice (Online Load Balancer) ----------------------------
+    if assignment is None:
+        assignment = balancer_lib.static_assignment(n_nodes, ns)
+    my_node = my_lane // ns
+    dst_nodes = jnp.arange(n_nodes, dtype=I32)
+    fwd_lane_in_node = balancer_lib.forwarder_lane(
+        assignment, my_node, my_lane % ns, dst_nodes)            # (n_nodes,)
+    dst_rank = dst_nodes * ns + fwd_lane_in_node                 # (n_nodes,) global lane
+
+    # --- stage-1 slot table: one row per (token, node) ----------------------
+    key1 = jnp.where(uses_node, dst_rank[None, :], -1)           # (T, n_nodes)
+    slots = build_slot_table(key1, placement.ep, capacity1)
+    token_ids = jnp.broadcast_to(jnp.arange(t, dtype=I32)[:, None], key1.shape)
+    src_of_slot = _inverse_slot(slots, token_ids)                # (R1,)
+
+    # --- piggybacked expert-level metadata ----------------------------------
+    # per (t, node): the k-assignments targeting that node, encoded as
+    # lane_in_node * E_local + e_local (node-local expert address), -1 invalid.
+    enc = (lane % ns) * placement.experts_per_lane + e_local     # (T, K)
+    enc_tn = jnp.where(node[:, None, :] == dst_nodes[None, :, None],
+                       enc[:, None, :], -1)                      # (T, n_nodes, K)
+    gate_tn = jnp.where(enc_tn >= 0, gates[:, None, :], 0)       # (T, n_nodes, K)
+
+    r1 = slots.total_rows
+    flat_slot = drop_neg(slots.slot.reshape(-1), r1)
+    meta_expert = jnp.full((r1, k), -1, I32).at[flat_slot].set(
+        enc_tn.reshape(-1, k), mode="drop")
+    meta_gate = jnp.zeros((r1, k), gates.dtype).at[flat_slot].set(
+        gate_tn.reshape(-1, k), mode="drop")
+
+    load = group_counts(key1.reshape(-1), placement.ep)
+    return HierPlan(slots, src_of_slot, meta_expert, meta_gate, load)
+
+
+class Stage2Plan(NamedTuple):
+    """Expert-level distribution descriptors, built on the forwarder."""
+    slots: SlotTable            # (R1, K) -> row in (node_size * E_local * C2) buffer
+    src_of_slot: jax.Array      # (R2,) stage-1 buffer row feeding each stage-2 row
+    gate_of_slot: jax.Array     # (R2,)
+
+
+def build_stage2_plan(meta_expert: jax.Array, meta_gate: jax.Array,
+                      node_size: int, experts_per_lane: int,
+                      capacity2: int) -> Stage2Plan:
+    """Expert-level descriptors from piggybacked metadata (paper §3.3, second
+    level).  Runs on the forwarder; includes intra-node expansion (a row used
+    by several local experts occupies several stage-2 slots — the paper's
+    intra-node redistribution)."""
+    r1, k = meta_expert.shape
+    key2 = meta_expert                                            # already lane*E+e
+    slots = build_slot_table(key2, node_size * experts_per_lane, capacity2)
+    row_ids = jnp.broadcast_to(jnp.arange(r1, dtype=I32)[:, None], key2.shape)
+    src_of_slot = _inverse_slot(slots, row_ids)
+    gate_of_slot = _inverse_slot(slots, meta_gate)
+    gate_of_slot = jnp.where(src_of_slot >= 0, gate_of_slot, 0).astype(meta_gate.dtype)
+    return Stage2Plan(slots, src_of_slot, gate_of_slot)

@@ -1,0 +1,129 @@
+"""Top-k MoE routing and the paper's routing matrices.
+
+The planner (``planner.py``) consumes two matrices (paper §3.3):
+
+  * ``A`` — token-expert matrix, shape ``(T, K)`` of expert ids (int32),
+  * ``B`` — token-node matrix derived from ``A`` under a fixed expert
+    placement, mapping each token to the destination *nodes* hosting its
+    selected experts.
+
+On TPU, "node" is a pod (multi-pod mesh) or a *virtual node* — a group of
+``node_size`` adjacent expert-parallel lanes (single-pod mesh); see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPlacement:
+    """Static placement of experts on an expert-parallel domain.
+
+    ``ep`` lanes host ``n_experts`` experts. When ``n_experts >= ep`` each lane
+    holds ``n_experts // ep`` consecutive experts.  When ``n_experts < ep``
+    each expert is *replicated* ``ep // n_experts`` times (Mixtral 8e on a
+    16-lane domain); the replica for a token is chosen by the planner.
+
+    Lanes are grouped into ``n_nodes = ep // node_size`` nodes of
+    ``node_size`` lanes each — the slow/fast communication hierarchy.
+    """
+
+    n_experts: int
+    ep: int
+    node_size: int
+
+    def __post_init__(self):
+        if self.ep % self.node_size != 0:
+            raise ValueError(f"ep={self.ep} not divisible by node_size={self.node_size}")
+        if self.n_experts >= self.ep:
+            if self.n_experts % self.ep != 0:
+                raise ValueError(
+                    f"n_experts={self.n_experts} not divisible by ep={self.ep}")
+        else:
+            if self.ep % self.n_experts != 0:
+                raise ValueError(
+                    f"ep={self.ep} not divisible by n_experts={self.n_experts} "
+                    "(replication requires an integer factor)")
+
+    @property
+    def n_nodes(self) -> int:
+        return self.ep // self.node_size
+
+    @property
+    def experts_per_lane(self) -> int:
+        return max(1, self.n_experts // self.ep)
+
+    @property
+    def replicas(self) -> int:
+        """Number of lanes holding a copy of each expert (>=1)."""
+        return max(1, self.ep // self.n_experts)
+
+    # -- placement maps (all static python/jnp, shape (n_experts,) etc.) ------
+
+    def lane_of_expert(self, expert_ids: jax.Array, replica_choice: jax.Array | None = None) -> jax.Array:
+        """Lane hosting ``expert_ids``. With replication, ``replica_choice`` in
+        [0, replicas) selects among copies (defaults to replica 0)."""
+        if self.n_experts >= self.ep:
+            return expert_ids // self.experts_per_lane
+        r = jnp.zeros_like(expert_ids) if replica_choice is None else replica_choice
+        # replica r of expert e lives on lane e + r * n_experts
+        return expert_ids + r * self.n_experts
+
+    def node_of_lane(self, lane: jax.Array) -> jax.Array:
+        return lane // self.node_size
+
+    def local_expert_index(self, expert_ids: jax.Array) -> jax.Array:
+        """Index of the expert within its lane's local expert table."""
+        if self.n_experts >= self.ep:
+            return expert_ids % self.experts_per_lane
+        return jnp.zeros_like(expert_ids)  # one (replicated) expert per lane
+
+
+def router_logits(x: jax.Array, w_router: jax.Array) -> jax.Array:
+    """(T, d) x (d, E) -> (T, E) in f32 for numerically-stable top-k/softmax."""
+    return jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("top_k", "normalize"))
+def top_k_routing(logits: jax.Array, top_k: int, normalize: bool = True):
+    """Softmax-then-top-k routing (Qwen3-MoE / Mixtral convention).
+
+    Returns ``(A, gate_weights)``: ``A`` is the (T, K) token-expert matrix of
+    the paper, ``gate_weights`` the (T, K) combine weights.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, experts = jax.lax.top_k(probs, top_k)
+    if normalize:
+        gate = gate / jnp.maximum(gate.sum(axis=-1, keepdims=True), 1e-9)
+    return experts.astype(jnp.int32), gate.astype(logits.dtype)
+
+
+def token_node_matrix(A: jax.Array, placement: ExpertPlacement,
+                      replica_choice: jax.Array | None = None) -> jax.Array:
+    """The paper's ``B`` matrix: destination node per (token, k) slot."""
+    lanes = placement.lane_of_expert(A, replica_choice)
+    return placement.node_of_lane(lanes)
+
+
+def balanced_replica_choice(A: jax.Array, placement: ExpertPlacement) -> jax.Array:
+    """For replicated experts, spread (token, k) assignments across replicas.
+
+    Deterministic round-robin on the running per-expert count — a cheap
+    sender-local analogue of picking the least-loaded replica.  Beyond-paper:
+    the paper has no replication (its EP >= n_experts always); we need it for
+    Mixtral-8e on 16 lanes and it doubles as decode-time load balancing.
+    """
+    if placement.replicas == 1:
+        return jnp.zeros_like(A)
+    T, K = A.shape
+    flat = A.reshape(-1)
+    # occurrence index of each expert id in flattened order
+    one_hot = jax.nn.one_hot(flat, placement.n_experts, dtype=jnp.int32)
+    occ = jnp.cumsum(one_hot, axis=0) - one_hot  # occurrences before this slot
+    occ_of_slot = jnp.take_along_axis(occ, flat[:, None], axis=1)[:, 0]
+    return (occ_of_slot % placement.replicas).reshape(T, K).astype(jnp.int32)

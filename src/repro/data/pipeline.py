@@ -1,0 +1,97 @@
+"""Data pipeline: deterministic synthetic token streams with host-side
+prefetch and mesh-aware placement.
+
+Two sources:
+  * ``SyntheticLM`` — hash-based tokens (uniform); throughput benchmarking.
+  * ``ZipfNgramLM`` — a learnable 2-gram language over a Zipf vocabulary, so
+    example training runs show a real loss curve (quickstart/train examples).
+
+The loader is deterministic in (seed, step) — a restart resumes the exact
+stream from the checkpointed step (fault-tolerance contract, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import threading
+import queue as queue_mod
+from typing import Iterator
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+def _rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+class SyntheticLM:
+    def __init__(self, vocab: int, seq_len: int, global_batch: int, seed: int = 0):
+        self.vocab, self.seq, self.batch, self.seed = vocab, seq_len, global_batch, seed
+
+    def batch_at(self, step: int) -> dict:
+        r = _rng(self.seed, step)
+        tok = r.integers(0, self.vocab, (self.batch, self.seq + 1), dtype=np.int32)
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+
+class ZipfNgramLM:
+    """2-gram LM: next ~ P(.|prev) with per-prev Zipf permutations — enough
+    structure for a ~100M model to show steady loss descent."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int, seed: int = 0):
+        self.vocab, self.seq, self.batch, self.seed = vocab, seq_len, global_batch, seed
+        r = _rng(seed, 0)
+        self.shift = r.integers(1, vocab, (vocab,), dtype=np.int64)
+
+    def batch_at(self, step: int) -> dict:
+        r = _rng(self.seed, step + 1)
+        b, s, v = self.batch, self.seq, self.vocab
+        # zipf-ish ranks; next token = (prev * a + rank-sample) mod V
+        ranks = np.minimum(
+            r.zipf(1.3, (b, s + 1)).astype(np.int64), v - 1)
+        tok = np.empty((b, s + 1), np.int64)
+        tok[:, 0] = r.integers(0, v, (b,))
+        for t in range(1, s + 1):
+            tok[:, t] = (self.shift[tok[:, t - 1]] + ranks[:, t]) % v
+        tok = tok.astype(np.int32)
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+
+class ShardedLoader:
+    """Places host batches on the mesh with the step function's batch specs,
+    prefetching ``depth`` steps ahead on a background thread."""
+
+    def __init__(self, source, shardings: dict, start_step: int = 0,
+                 depth: int = 2):
+        self.source = source
+        self.shardings = shardings
+        self.step = start_step
+        self.depth = depth
+        self._q: queue_mod.Queue = queue_mod.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            host = self.source.batch_at(step)
+            try:
+                self._q.put((step, host), timeout=1.0)
+                step += 1
+            except queue_mod.Full:
+                continue
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        step, host = self._q.get()
+        dev = {k: jax.device_put(v, self.shardings.get(k))
+               for k, v in host.items()}
+        self.step = step + 1
+        return dev
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On TPU the Pallas (Mosaic) path runs natively; on CPU the kernels execute in
+``interpret=True`` (the kernel body evaluated op-by-op — used for correctness
+validation) or fall back to the jnp reference for speed.  The dense_fused
+dComm engine routes its staging copies and expert FFN through these wrappers
+when ``use_pallas()`` is on.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.grouped_matmul import grouped_matmul as _gmm_pallas
+from repro.kernels.segment_gather import segment_gather as _gather_pallas
+from repro.kernels.segment_scatter_add import (
+    segment_scatter_add as _scatter_pallas)
+
+
+@functools.lru_cache(None)
+def backend() -> str:
+    return jax.default_backend()
+
+
+def use_pallas() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return backend() == "tpu"
+
+
+def segment_gather(src, idx):
+    if use_pallas():
+        return _gather_pallas(src, idx, interpret=backend() != "tpu")
+    return ref.segment_gather_ref(src, idx)
+
+
+def segment_scatter_add(src, dst, gates, out_rows: int):
+    if use_pallas():
+        return _scatter_pallas(src, dst, gates, out_rows,
+                               interpret=backend() != "tpu")
+    return ref.segment_scatter_add_ref(src, dst, gates, out_rows)
+
+
+def grouped_matmul(x, w, counts):
+    if use_pallas():
+        return _gmm_pallas(x, w, counts, interpret=backend() != "tpu")
+    return ref.grouped_matmul_ref(x, w, counts)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every kernel in this package (test references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_gather_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = src[idx[i]]; idx == -1 -> zeros."""
+    got = jnp.take(src, jnp.maximum(idx, 0), axis=0)
+    return jnp.where((idx >= 0)[:, None], got, 0)
+
+
+def segment_scatter_add_ref(src: jax.Array, dst: jax.Array, gates: jax.Array,
+                            out_rows: int) -> jax.Array:
+    """out[dst[i]] += gates[i] * src[i]; dst == -1 dropped."""
+    w = src.astype(jnp.float32) * gates.astype(jnp.float32)[:, None]
+    out = jnp.zeros((out_rows, src.shape[1]), jnp.float32)
+    safe = jnp.where(dst < 0, out_rows, dst)     # -1 wraps under mode="drop"!
+    out = out.at[safe].add(w, mode="drop")
+    return out.astype(src.dtype)
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, counts: jax.Array,
+                       block_c: int = 128) -> jax.Array:
+    """Per-group matmul with block-granular occupancy skipping semantics:
+    row-blocks entirely beyond a group's count are zero."""
+    g, c, d = x.shape
+    out = jnp.einsum("gcd,gdf->gcf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    bc = min(block_c, c)
+    blk = jnp.arange(c) // bc
+    live = counts[:, None] > blk[None, :] * bc
+    return (out * live[..., None]).astype(x.dtype)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: descriptor-driven row gather (dComm dispatch copy).
+
+The paper's CUDA copy engine interprets segment descriptors inline with the
+transfer.  On TPU the analogue is a scalar-prefetched gather whose BlockSpec
+``index_map`` *is* the descriptor interpretation: the source row index for
+each output row comes from the prefetched descriptor array, so rows stream
+HBM→VMEM→HBM already in communication-buffer order — no intermediate
+materialisation.  Used to stage tokens into the dense_fused engine's send
+buffer (slot layout), fusing the paper's "rearrangement" into the copy.
+
+Grid: (rows_out, d_model/block_d).  One token row per grid row; the row's
+descriptor selects the source block.  Invalid descriptors (-1: empty slot)
+read row 0 and are masked to zero in the kernel body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-only helpers; interpret mode works without them
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+    block = src_ref[...]
+    out_ref[...] = jnp.where(valid, block, jnp.zeros_like(block))
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def segment_gather(src: jax.Array, idx: jax.Array, *, block_d: int = 512,
+                   interpret: bool = True) -> jax.Array:
+    """out[i] = src[idx[i]] (idx -1 -> zeros).  src: (T, d); idx: (R,)."""
+    t, d = src.shape
+    r = idx.shape[0]
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, d // bd),
+        # descriptor interpretation IS the index_map; invalid (-1) clamps to
+        # row 0 and the kernel masks the block to zero.
+        in_specs=[pl.BlockSpec(
+            (1, bd), lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), j))],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),
+    )
+
+    fn = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), src.dtype),
+        interpret=interpret,
+    )
+    return fn(idx.astype(jnp.int32), src)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: descriptor-driven weighted scatter-add (dComm combine).
+
+Combine-side descriptor interpretation: expert outputs land back in slot
+order; each row is multiplied by its gate weight and accumulated at the
+original token row.  TPU grids execute sequentially on a core, so the
+read-modify-write accumulation is race-free; the destination buffer is
+donated via input/output aliasing.
+
+Grid: (rows_in, d_model/block_d).  dst[i] = -1 rows are dropped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _scatter_kernel(dst_ref, gate_ref, src_ref, acc_ref, out_ref):
+    i = pl.program_id(0)
+    valid = dst_ref[i] >= 0
+    w = gate_ref[i].astype(jnp.float32)
+    contrib = jnp.where(valid, src_ref[...].astype(jnp.float32) * w, 0.0)
+    # read-modify-write on the (zero-initialised, aliased) output block; the
+    # sequential TPU grid makes revisit accumulation race-free.
+    out_ref[...] = (out_ref[...].astype(jnp.float32) + contrib).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_rows", "block_d", "interpret"))
+def segment_scatter_add(src: jax.Array, dst: jax.Array, gates: jax.Array,
+                        out_rows: int, *, block_d: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """out[dst[i]] += gates[i] * src[i].  src: (R, d); dst/gates: (R,).
+
+    Note: revisited destination blocks accumulate because the grid is
+    sequential and the accumulator is aliased in-place.
+    """
+    r, d = src.shape
+    bd = min(block_d, d)
+    assert d % bd == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # dst, gates
+        grid=(r, d // bd),
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i, j, dst, g: (i, j)),           # src
+            # aliased zero accumulator: same window as out (never read in the
+            # kernel; the alias just zero-initialises the output buffer)
+            pl.BlockSpec((1, bd), lambda i, j, dst, g: (jnp.maximum(dst[i], 0), j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bd), lambda i, j, dst, g: (jnp.maximum(dst[i], 0), j)),
+    )
+    fn = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, d), src.dtype),
+        input_output_aliases={3: 0},            # zero acc donated to output
+        interpret=interpret,
+    )
+    acc = jnp.zeros((out_rows, d), src.dtype)
+    return fn(dst.astype(jnp.int32), gates.astype(jnp.float32), src, acc)

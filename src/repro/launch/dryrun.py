@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the real step
+function with ShapeDtypeStruct inputs (no allocation), compiles, and records
+memory_analysis / cost_analysis / the collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b --shape train_4k \
+      --mesh multipod --engine fused_hier
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both] [--out FILE]
+
+``--all`` drives each cell in a fresh subprocess (jax locks the device count
+on first init; isolation also bounds compile memory).
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def _cell(arch_id: str, shape_id: str, mesh_kind: str, engine: str,
+          capacity_factor: float, remat: bool, seq_shard_attn: bool,
+          accum: int = 1) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.configs.base import SHAPES, supports
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (batch_specs, make_decode_step,
+                                    make_prefill_step, make_train_step,
+                                    decode_state_shardings)
+    from repro.models import zoo
+    from repro.models.lm import make_context
+    from repro.optim import adamw
+    from repro.parallel import sharding as sh
+
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    ok, why = supports(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    ctx = make_context(cfg, mesh, multi_pod=multi_pod, engine=engine,
+                       capacity_factor=capacity_factor, remat=remat)
+    bundle = zoo.build(cfg, ctx)
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(bundle.init, key)
+    pspecs = sh.param_specs(params_abs, multi_pod=multi_pod,
+                            model_size=mesh.shape['model'],
+                            fsdp_experts=ctx.fsdp_experts)
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    ispecs = zoo.input_specs(cfg, shape)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = adamw.AdamWConfig()
+            opt_abs = jax.eval_shape(adamw.init, params_abs)
+            ospecs = adamw.state_specs(pspecs, params_abs,
+                                       mesh.shape["data"], zero1=True)
+            bspecs = batch_specs(cfg, shape.kind, ctx, ispecs)
+            step = make_train_step(bundle, opt_cfg, accum=accum)
+            jf = jax.jit(step,
+                         in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+                         out_shardings=(ns(pspecs), ns(ospecs), None),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_abs, opt_abs, ispecs)
+        elif shape.kind == "prefill":
+            params_abs = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+                params_abs)
+            bspecs = batch_specs(cfg, shape.kind, ctx, ispecs)
+            step = make_prefill_step(bundle, max_len=shape.seq_len)
+            jf = jax.jit(step, in_shardings=(ns(pspecs), ns(bspecs)))
+            lowered = jf.lower(params_abs, ispecs)
+        else:  # decode
+            params_abs = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+                params_abs)
+            b = shape.global_batch
+            dsizes = {ax: mesh.shape[ax] for ax in ctx.data_axes}
+            tot = 1
+            for v in dsizes.values():
+                tot *= v
+            if b % tot == 0 and b >= tot:
+                baxes = ctx.data_axes
+            elif b % mesh.shape["data"] == 0 and b >= mesh.shape["data"]:
+                baxes = ("data",)
+            else:
+                baxes = ()
+            state_abs = zoo.decode_state_specs(cfg, shape, ctx)
+            sspecs = decode_state_shardings(cfg, state_abs, ctx, baxes)
+            step = make_decode_step(bundle, max_len=shape.seq_len)
+            jf = jax.jit(step,
+                         in_shardings=(ns(pspecs), ns(sspecs),
+                                       NamedSharding(mesh, P(baxes or None))),
+                         donate_argnums=(1,))
+            lowered = jf.lower(params_abs, state_abs, ispecs["tokens"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    cost = ca if isinstance(ca, dict) else ca[0]
+    hlo = compiled.as_text()
+    mf = rl.model_flops(cfg, shape, shape.kind)
+    link_bw = rl.DCI_BW if multi_pod else rl.ICI_BW
+    # loop-aware HLO cost model (XLA's cost_analysis counts scan bodies once)
+    from repro.launch.hlo_cost import analyze_text
+    hc = analyze_text(hlo)
+    roof = rl.analyze({"flops": hc.flops, "bytes accessed": hc.bytes},
+                      "", mf, n_chips, link_bw)
+    roof.coll = None
+    roof.collective_s = hc.coll_corrected / link_bw
+
+    out = {
+        "status": "ok",
+        "arch": arch_id, "shape": shape_id, "mesh": mesh_kind,
+        "engine": engine if cfg.moe else None,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "cost": {"flops": hc.flops, "bytes_accessed": hc.bytes,
+                 "xla_reported_flops": float(cost.get("flops", 0.0)),
+                 "xla_reported_bytes": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {
+            "bytes_by_op": hc.coll_by_op,
+            "count_by_op": hc.coll_count,
+            "raw_bytes": hc.coll_raw,
+            "corrected_bytes": hc.coll_corrected,
+            "max_group": hc.max_group,
+        },
+        "roofline": {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "model_flops_total": mf,
+            "model_flops_per_dev": roof.model_flops_per_dev,
+            "flops_ratio": roof.flops_ratio, "mfu_bound": roof.mfu_bound,
+        },
+    }
+    return out
+
+
+def run_cell_subprocess(arch, shape, mesh_kind, engine, cap, out_file,
+                        remat=True, timeout=3000):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh_kind, "--engine", engine,
+           "--capacity-factor", str(cap), "--json"]
+    if not remat:
+        cmd.append("--no-remat")
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                           env={**os.environ, "PYTHONPATH": "src"})
+        line = r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "{}"
+        try:
+            res = json.loads(line)
+        except json.JSONDecodeError:
+            res = {"status": "error", "error": (r.stderr or r.stdout)[-2000:]}
+    except subprocess.TimeoutExpired:
+        res = {"status": "timeout", "elapsed_s": time.time() - t0}
+    res.setdefault("arch", arch)
+    res.setdefault("shape", shape)
+    res.setdefault("mesh", mesh_kind)
+    res.setdefault("engine", engine)
+    if out_file:
+        with open(out_file) as f:
+            data = json.load(f)
+        data[f"{arch}|{shape}|{mesh_kind}|{engine}"] = res
+        with open(out_file, "w") as f:
+            json.dump(data, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--engine", default="fused_flat")
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--seq-shard-attn", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--json", action="store_true",
+                    help="print one JSON line (for the --all driver)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS
+        from repro.configs.base import SHAPES
+        if not os.path.exists(args.out):
+            with open(args.out, "w") as f:
+                json.dump({}, f)
+        meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+        with open(args.out) as f:
+            done = json.load(f)
+        for mesh_kind in meshes:
+            for arch in ARCH_IDS:
+                for shape in SHAPES:
+                    key = f"{arch}|{shape}|{mesh_kind}|{args.engine}"
+                    if done.get(key, {}).get("status") in ("ok", "skipped"):
+                        continue
+                    print(f"[dryrun] {key} ...", flush=True)
+                    res = run_cell_subprocess(arch, shape, mesh_kind,
+                                              args.engine,
+                                              args.capacity_factor, args.out)
+                    print(f"[dryrun] {key} -> {res.get('status')} "
+                          f"(compile {res.get('compile_s', '?')}s, "
+                          f"dominant {res.get('roofline', {}).get('dominant', '-')})",
+                          flush=True)
+        return
+
+    try:
+        res = _cell(args.arch, args.shape, args.mesh, args.engine,
+                    args.capacity_factor, remat=not args.no_remat,
+                    seq_shard_attn=args.seq_shard_attn, accum=args.accum)
+    except Exception:
+        res = {"status": "error", "error": traceback.format_exc()[-4000:]}
+    if args.json:
+        print(json.dumps(res))
+    else:
+        print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,374 @@
+"""Loop-aware cost model over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes
+scan-over-layers / blocked-attention programs look ~L× cheaper than they are.
+This module re-derives roofline inputs from the optimized HLO text:
+
+  * flops            — 2·numel(result)·contracted for every ``dot`` (including
+                       dots nested in fusions), × enclosing ``known_trip_count``s
+  * hbm bytes        — Σ (operand + result bytes) of every top-level op that
+                       materialises (fusion/dot/copy/slice/...), × trip counts;
+                       free ops (bitcast, tuple, get-tuple-element, parameter)
+                       excluded — matches the "each op reads inputs / writes
+                       outputs once" roofline convention
+  * collective bytes — result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute /
+                       ragged-all-to-all with ring bandwidth factors,
+                       × trip counts
+
+Conditional branches contribute max(branch costs).  All counts are per-device
+(the HLO module is the per-partition SPMD program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "u1": 1,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*"
+    r"((?:\([^=]*?\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+|\w[\w.\-]*)\s*\((.*)\)\s*->\s*[^{]*\{\s*$")
+_SHAPE_RE = re.compile(r"([\w]+)\[([\d,]*)\]")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:[\w]+\[[\d,]*\]))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
+    r"\s*(%[\w.\-]+(?:\s*,\s*%[\w.\-]+)*)")
+
+FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state", "custom-call",
+}
+COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "all-gather-start",
+    "all-reduce-start", "collective-permute-start",
+}
+
+
+def _parse_shapes(type_str: str):
+    """-> list of (dtype, [dims])."""
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _numel_first(type_str: str) -> int:
+    shapes = _parse_shapes(type_str)
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict            # %name -> type string
+    ops: list               # [Op]
+
+
+def parse_module(text: str) -> dict:
+    comps: dict = {}
+    cur = None
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(1)
+                if not name.startswith("%"):
+                    name = "%" + name
+                params = {}
+                for pn, pt in _PARAM_RE.findall(m.group(2)):
+                    params["%" + pn] = pt
+                cur = Computation(name, params, [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            # split operand region (up to matching paren) from attributes
+            depth = 1
+            i = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operand_str, attrs = rest[:i], rest[i + 1:]
+            operands = re.findall(r"%[\w.\-]+", operand_str)
+            cur.ops.append(Op(name, type_str, opcode, operands, attrs))
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_raw: float = 0.0
+    coll_corrected: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    coll_count: dict = dataclasses.field(default_factory=dict)
+    max_group: int = 1
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_raw += o.coll_raw
+        self.coll_corrected += o.coll_corrected
+        for k, v in o.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0) + v
+        for k, v in o.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v
+        self.max_group = max(self.max_group, o.max_group)
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.coll_raw * k,
+                    self.coll_corrected * k,
+                    {a: v * k for a, v in self.coll_by_op.items()},
+                    {a: v * k for a, v in self.coll_count.items()},
+                    self.max_group)
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: dict = {}
+        entry = None
+        for name in self.comps:
+            if ".main" in name or name.lstrip("%").startswith("main"):
+                entry = name
+        self.entry = entry or max(self.comps, key=lambda c: len(self.comps[c].ops))
+
+    # -- per-computation symbol table ------------------------------------
+    def _shapes(self, comp: Computation) -> dict:
+        table = dict(comp.params)
+        for op in comp.ops:
+            table[op.name] = op.type_str
+        return table
+
+    def _dot_flops(self, op: Op, table: dict) -> float:
+        out_numel = _numel_first(op.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        contracted = 1
+        if m and op.operands:
+            lhs_type = table.get(op.operands[0], "")
+            shapes = _parse_shapes(lhs_type)
+            if shapes:
+                dims = shapes[0][1]
+                for ix in m.group(1).split(","):
+                    if ix and int(ix) < len(dims):
+                        contracted *= dims[int(ix)]
+        return 2.0 * out_numel * contracted
+
+    def _nested_flops(self, comp_name: str) -> float:
+        """flops of dots inside a fused computation (and its callees)."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        table = self._shapes(comp)
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode in ("dot", "dot-general"):
+                total += self._dot_flops(op, table)
+            for callee in self._callees(op):
+                total += self._nested_flops(callee)
+        return total
+
+    @staticmethod
+    def _callees(op: Op) -> list:
+        out = []
+        for m in _CALLED_RE.finditer(op.rest):
+            out.extend(re.findall(r"%[\w.\-]+", m.group(1)))
+        return out
+
+    # -- slice-aware memory traffic ---------------------------------------
+    SLICE_READS = {"slice", "dynamic-slice", "gather"}
+
+    def _op_bytes(self, op: Op, table: dict) -> float:
+        """HBM traffic of one materialising op, slice-aware."""
+        oc = op.opcode
+        res = _nbytes(op.type_str)
+        if oc in self.SLICE_READS:
+            return 2.0 * res                       # read slice + write result
+        if oc == "dynamic-update-slice":
+            upd = _nbytes(table.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+            return 2.0 * upd                       # in-place region update
+        if oc == "scatter":
+            upd = _nbytes(table.get(op.operands[2], "")) if len(op.operands) > 2 else res
+            return 3.0 * upd                       # read+write region + updates
+        if oc in ("convert", "copy"):
+            # XLA:CPU materialises f32 copies of bf16 tensors around oneDNN
+            # gemms; on the TPU target these fuse into the consumer.  Count
+            # them free (documented in EXPERIMENTS.md §Method).
+            return 0.0
+        if oc in ("broadcast", "pad", "concatenate", "reshape", "reverse",
+                  "transpose"):
+            src = sum(_nbytes(table.get(o, "")) for o in op.operands)
+            return min(src, res) + res
+        if oc == "fusion":
+            return res + self._fusion_read_bytes(op, table)
+        # default: read all operands, write result
+        return res + sum(_nbytes(table.get(o, "")) for o in op.operands)
+
+    def _fusion_read_bytes(self, op: Op, table: dict) -> float:
+        """Bytes read by a fusion: per-operand, if the matching parameter is
+        only consumed by slice-like ops inside, count the slices, not the
+        whole operand (XLA fuses dynamic-slice into the loop body)."""
+        callees = self._callees(op)
+        comp = self.comps.get(callees[0]) if callees else None
+        if comp is None:
+            return sum(_nbytes(table.get(o, "")) for o in op.operands)
+        pnames = list(comp.params)
+        inner_table = self._shapes(comp)
+        users: dict = defaultdict(list)
+        for iop in comp.ops:
+            for o in iop.operands:
+                users[o].append(iop)
+        total = 0.0
+        for i, operand in enumerate(op.operands):
+            full = _nbytes(table.get(operand, ""))
+            if i < len(pnames):
+                us = users.get(pnames[i], [])
+                if us and all(u.opcode in self.SLICE_READS for u in us):
+                    total += min(full, sum(_nbytes(u.type_str) for u in us))
+                    continue
+                if us and all(u.opcode == "dynamic-update-slice" and
+                              u.operands and u.operands[0] == pnames[i]
+                              for u in us):
+                    total += sum(_nbytes(inner_table.get(u.operands[1], ""))
+                                 if len(u.operands) > 1 else 0 for u in us)
+                    continue
+            total += full
+        return total
+
+    def _collective(self, op: Op, table: dict, producers: dict | None = None) -> Cost:
+        nbytes = _nbytes(op.type_str)
+        # f32 collectives fed by convert(bf16) are a CPU-backend artifact
+        # (oneDNN upcasts bf16 gemms); the TPU wire carries bf16 — halve.
+        if producers is not None and op.operands:
+            prods = [producers.get(o) for o in op.operands]
+            if all(p is not None and p.opcode == "convert" and
+                   p.operands and "bf16[" in table.get(p.operands[0], "")
+                   for p in prods) and "f32[" in op.type_str:
+                nbytes //= 2
+        n = 1
+        g = _GROUPS_IOTA_RE.search(op.rest)
+        if g:
+            n = int(g.group(2))
+        else:
+            g = _GROUPS_RE.search(op.rest)
+            if g:
+                n = g.group(1).count(",") + 1
+        if op.opcode == "collective-permute" and n == 1:
+            n = 2
+        if n <= 1:
+            return Cost()
+        base = op.opcode.replace("-start", "")
+        factor = {"all-reduce": 2.0 * (n - 1) / n,
+                  "all-gather": (n - 1) / n,
+                  "reduce-scatter": (n - 1) / n,
+                  "all-to-all": (n - 1) / n,
+                  "ragged-all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0}[base]
+        return Cost(0, 0, nbytes, nbytes * factor, {base: nbytes}, {base: 1},
+                    max_group=n)
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return Cost()
+        self._memo[comp_name] = Cost()          # cycle guard
+        table = self._shapes(comp)
+        producers = {o.name: o for o in comp.ops}
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                m = _TRIP_RE.search(op.rest)
+                trips = int(m.group(1)) if m else 1
+                callees = self._callees(op)     # body + condition
+                body = callees[0] if callees else None
+                # heuristics: body computation is the one named in body=
+                mb = re.search(r"body=(%[\w.\-]+)", op.rest)
+                if mb:
+                    body = mb.group(1)
+                if body:
+                    total += self.cost_of(body).scaled(trips)
+                continue
+            if oc == "conditional":
+                branch_costs = [self.cost_of(c) for c in self._callees(op)]
+                if branch_costs:
+                    best = max(branch_costs, key=lambda c: max(c.flops, c.bytes))
+                    total += best
+                total += Cost(bytes=_nbytes(op.type_str))
+                continue
+            if oc == "call":
+                for c in self._callees(op):
+                    total += self.cost_of(c)
+                continue
+            if oc in COLLECTIVES:
+                total += self._collective(op, table, producers)
+                total += Cost(bytes=_nbytes(op.type_str))
+                continue
+            if oc in FREE_OPS or oc.endswith("-done"):
+                continue
+            own = Cost()
+            if oc in ("dot", "dot-general"):
+                own.flops = self._dot_flops(op, table)
+            if oc == "fusion":
+                for c in self._callees(op):
+                    own.flops += self._nested_flops(c)
+            own.bytes = self._op_bytes(op, table)
+            total += own
+        self._memo[comp_name] = total
+        return total
+
+    def analyze(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze_text(text: str) -> Cost:
+    return Analyzer(text).analyze()

@@ -1,0 +1,30 @@
+"""Production mesh construction (spec-mandated shapes).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int | None = None, model: int | None = None):
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    if data is None or model is None:
+        model = 1
+        data = n
+        for m in (4, 2):
+            if n % m == 0 and n >= m:
+                model, data = m, n // m
+                break
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

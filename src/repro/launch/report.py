@@ -1,0 +1,63 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_table(results: dict, mesh_kind: str) -> str:
+    rows = []
+    header = ("| arch | shape | compute s | memory s | collective s | dominant "
+              "| flops-ratio | mfu-bound | temp GB | fits 16G |")
+    sep = "|" + "---|" * 10
+    for key, r in sorted(results.items()):
+        arch, shape, mesh, _ = key.split("|")
+        if mesh != mesh_kind:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | *skipped* | — | — | — "
+                        f"| ({r['reason'][:48]}…) |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | **{r.get('status')}** "
+                        "| — | — | — | — |")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]
+        tot_gb = (mem["temp_bytes"] + mem["argument_bytes"]) / 1e9
+        fits = "yes" if tot_gb < 16 else "NO"
+        rows.append(
+            f"| {arch} | {shape} | {ro['compute_s']:.4f} | {ro['memory_s']:.4f} "
+            f"| {ro['collective_s']:.4f} | {ro['dominant']} "
+            f"| {ro['flops_ratio']:.3f} | {ro['mfu_bound']:.4f} "
+            f"| {tot_gb:.2f} | {fits} |")
+    return "\n".join([header, sep] + rows)
+
+
+def collective_schedule(results: dict, key: str) -> str:
+    r = results[key]
+    if r.get("status") != "ok":
+        return f"{key}: {r.get('status')}"
+    c = r["collectives"]
+    parts = [f"{op}: {cnt:.0f} ops / {c['bytes_by_op'][op]/1e9:.2f} GB"
+             for op, cnt in c["count_by_op"].items()]
+    return f"{key}: " + "; ".join(parts)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--schedule-for", default=None)
+    args = ap.parse_args()
+    with open(args.results) as f:
+        results = json.load(f)
+    if args.schedule_for:
+        print(collective_schedule(results, args.schedule_for))
+    else:
+        print(fmt_table(results, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

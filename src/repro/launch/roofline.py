@@ -1,0 +1,217 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (per spec):
+
+  compute    = HLO_FLOPs / peak_FLOPs_chip          (cost_analysis is per-device)
+  memory     = HLO_bytes / HBM_bw_chip
+  collective = bandwidth-corrected collective bytes / link_bw_chip
+
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO text and
+sum operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (+ ragged-all-to-all on TPU), with the standard ring
+bandwidth factors: AG/RS/A2A (n-1)/n, AR 2(n-1)/n, permute 1.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCI_BW = 25e9           # cross-pod (data-center) tier, used for 'pod' collectives
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)[\s(]")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    corrected_bytes: float          # bandwidth-factor-corrected total
+    raw_bytes: float
+    count_by_op: dict
+    max_group: int
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: dict = defaultdict(float)
+    count_by_op: dict = defaultdict(int)
+    corrected = 0.0
+    raw = 0.0
+    max_group = 1
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(4)
+        # result shape(s): tuple "(f32[..], ...)" or single "bf16[...]"
+        if m.group(1) is not None:
+            shapes = _SHAPE_RE.findall(m.group(1))
+        else:
+            shapes = [(m.group(2), m.group(3))]
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        # participant count
+        n = 1
+        g = _GROUPS_IOTA_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g = _GROUPS_RE.search(line)
+            if g:
+                n = g.group(1).count(",") + 1
+        max_group = max(max_group, n)
+        if n <= 1:
+            continue  # self-exchange: no wire traffic
+        factor = {"all-reduce": 2.0 * (n - 1) / n,
+                  "all-gather": (n - 1) / n,
+                  "reduce-scatter": (n - 1) / n,
+                  "all-to-all": (n - 1) / n,
+                  "ragged-all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0}[op]
+        bytes_by_op[op] += nbytes
+        count_by_op[op] += 1
+        raw += nbytes
+        corrected += nbytes * factor
+    return CollectiveStats(dict(bytes_by_op), corrected, raw,
+                           dict(count_by_op), max_group)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll: CollectiveStats
+    model_flops_per_dev: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Useful-FLOPs fraction of roofline: MODEL_FLOPS/chip/peak vs the
+        dominant term — the score the perf loop pushes up."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops_per_dev / PEAK_FLOPS) / self.bound_s
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops_per_dev / self.flops if self.flops else 0.0
+
+
+def analyze(cost: dict, hlo_text: str, model_flops_total: float,
+            n_chips: int, link_bw: float = ICI_BW) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=nbytes / HBM_BW,
+        collective_s=coll.corrected_bytes / link_bw,
+        flops=flops,
+        bytes_accessed=nbytes,
+        coll=coll,
+        model_flops_per_dev=model_flops_total / n_chips,
+    )
+
+
+# ------------------------------------------------------------ model FLOPs ---
+
+def count_matmul_params(cfg) -> float:
+    """Matmul parameter count (the N of 6·N·D): includes the LM head (it is a
+    matmul), excludes the embedding gather."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.hd
+    n = float(d * cfg.vocab)                    # lm_head
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        n += L * (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                  + cfg.n_heads * hd * d)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        n += L * 3 * d * cfg.d_ff
+    if cfg.family == "moe":
+        n += L * d * cfg.moe.n_experts          # router
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        din = s.expand * d
+        h = din // s.head_dim
+        d_in = 2 * din + 2 * s.n_groups * s.d_state + h
+        n += L * (d * d_in + din * d)
+    if cfg.family == "encdec":
+        le = cfg.encoder_layers
+        n += (L + le) * (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                         + cfg.n_heads * hd * d)
+        n += L * (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                  + cfg.n_heads * hd * d)        # cross-attn
+        n += (L + le) * 3 * d * cfg.d_ff
+    return n
+
+
+def active_moe_params(cfg) -> float:
+    """Active expert params per token (MoE: 6·N_active·D convention)."""
+    if cfg.family != "moe":
+        return 0.0
+    return cfg.n_layers * cfg.moe.top_k * 3 * cfg.d_model * cfg.moe.d_ff_expert
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Global MODEL_FLOPS for one step of this cell (6·N·D / 2·N·D)."""
+    n = count_matmul_params(cfg) + active_moe_params(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if kind == "train":
+        tokens = b * s
+        flops = 6.0 * n * tokens
+        # causal attention: 6·L·H·hd·S per token (fwd 2 + bwd 4), halved
+        if cfg.family != "ssm":
+            L = cfg.n_layers + (cfg.encoder_layers if cfg.family == "encdec" else 0)
+            w = min(s, cfg.window) if cfg.window else s
+            flops += 6.0 * L * cfg.n_heads * cfg.hd * w * tokens  # qk+pv
+        return flops
+    if kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * n * tokens
+        if cfg.family != "ssm":
+            L = cfg.n_layers + (cfg.encoder_layers if cfg.family == "encdec" else 0)
+            w = min(s, cfg.window) if cfg.window else s
+            flops += 2.0 * L * cfg.n_heads * cfg.hd * w * tokens
+        return flops
+    # decode: one token per sequence; attention reads the whole cache
+    tokens = b
+    flops = 2.0 * n * tokens
+    if cfg.family != "ssm":
+        cache = min(s, cfg.window) if cfg.window and cfg.family != "hybrid" else s
+        flops += 4.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * cache * tokens
+    return flops

@@ -1,0 +1,111 @@
+"""Jittable step functions + their sharding specs: the units the dry-run
+lowers and the trainers execute."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import zoo, lm
+from repro.models.lm import ModelContext
+from repro.optim import adamw
+from repro.parallel import sharding as sh
+
+
+def batch_specs(cfg: ArchConfig, shape_kind: str, ctx: ModelContext,
+                specs_of: dict) -> dict:
+    """PartitionSpecs for each batch entry, matching the model's expectations."""
+    dp, sp = ctx.data_axes, ctx.sp_axes
+
+    def spec(name, leaf):
+        if name in ("tokens", "labels"):
+            if leaf.ndim == 2:
+                return P(dp, sp)
+            return P(dp)                     # decode: (B,)
+        if name in ("embeds", "frames"):
+            return P(dp, sp, None)
+        if name == "positions":
+            return P(None, None) if leaf.ndim == 2 else P(None)
+        raise KeyError(name)
+
+    return {k: spec(k, v) for k, v in specs_of.items()}
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: ShapeConfig, ctx: ModelContext):
+    """Decode shards batch over data only (B may be < device count)."""
+    b = shape.global_batch
+    data = ctx.mesh.shape["data"]
+    dp = ("data",) if b % data == 0 and b >= data else ()
+    return dp
+
+
+def make_train_step(bundle: zoo.ModelBundle, opt_cfg: adamw.AdamWConfig,
+                    accum: int = 1):
+    """``accum > 1`` splits the global batch into microbatches (gradient
+    accumulation) — activation temps shrink ~1/accum at the same global
+    batch, the lever that fits mixtral-class models in 16 GB/chip."""
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                bundle.loss, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def one(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(
+                    bundle.loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(one, (g0, jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: (g / accum), gsum)
+            loss = lsum / accum
+            metrics = {"loss": loss}
+        params, opt_state, opt_metrics = adamw.update(
+            grads, opt_state, params, opt_cfg)
+        return params, opt_state, {**metrics, **opt_metrics}
+    return train_step
+
+
+def make_prefill_step(bundle: zoo.ModelBundle, max_len: int):
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(bundle: zoo.ModelBundle, max_len: int):
+    def decode_step(params, state, tokens):
+        return bundle.decode_step(params, state, tokens, max_len)
+    return decode_step
+
+
+def decode_state_shardings(cfg: ArchConfig, state_specs_tree, ctx: ModelContext,
+                           batch_axes):
+    """KV caches: (L, B, C, Hkv, hd) — batch over data when divisible, heads
+    over model when divisible; SSM states similar."""
+    model = ctx.mesh.shape["model"]
+
+    def spec(leaf):
+        if leaf.ndim < 3:
+            return P(*([None] * leaf.ndim))
+        dims = [None] * leaf.ndim
+        if batch_axes:
+            dims[1] = batch_axes
+        # shard the first large model-divisible dim (cache seq or heads)
+        for i in range(2, leaf.ndim):
+            if leaf.shape[i] % model == 0 and leaf.shape[i] >= model:
+                dims[i] = "model"
+                break
+        return P(*dims)
+
+    return jax.tree.map(spec, state_specs_tree)

@@ -1,0 +1,105 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Builds the mesh from the available devices (production meshes are exercised
+via dryrun.py), wires the FUSCO engine per config, and runs the
+fault-tolerant loop with checkpointing and the deterministic data stream.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.data.pipeline import ShardedLoader, SyntheticLM, ZipfNgramLM
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import batch_specs, make_train_step
+from repro.models import zoo
+from repro.models.lm import make_context
+from repro.optim import adamw
+from repro.parallel import sharding as sh
+from repro.runtime.fault_tolerance import RunConfig, run_training
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized variant of the arch (CPU)")
+    ap.add_argument("--engine", default="fused_hier")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default="zipf", choices=["zipf", "uniform"])
+    ap.add_argument("--capacity-factor", type=float, default=2.0)
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    ctx = make_context(cfg, mesh, multi_pod=False, engine=args.engine,
+                       capacity_factor=args.capacity_factor,
+                       node_size=max(1, mesh.shape["model"] // 2))
+    bundle = zoo.build(cfg, ctx)
+
+    key = jax.random.PRNGKey(0)
+    with mesh:
+        params = bundle.init(key)
+        pspecs = sh.param_specs(params, multi_pod=False,
+                                model_size=mesh.shape["model"],
+                                fsdp_experts=ctx.fsdp_experts)
+        params = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P)))
+        opt = adamw.init(params)
+        opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                                    total_steps=args.steps)
+        step_fn = jax.jit(make_train_step(bundle, opt_cfg),
+                          donate_argnums=(0, 1))
+
+        src_cls = ZipfNgramLM if args.data == "zipf" else SyntheticLM
+        source = src_cls(cfg.vocab, args.seq, args.batch)
+        ispecs = {k: v for k, v in source.batch_at(0).items()}
+        bspecs = batch_specs(cfg, "train", ctx,
+                             {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                              for k, v in ispecs.items()})
+        bshard = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
+
+        def batch_at(step):
+            host = source.batch_at(step)
+            return {k: jax.device_put(v, bshard[k]) for k, v in host.items()}
+
+        t_hist = []
+
+        def wrapped(params, opt, batch):
+            t0 = time.perf_counter()
+            params, opt, metrics = step_fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            t_hist.append(time.perf_counter() - t0)
+            n = len(t_hist)
+            if n % args.log_every == 1:
+                print(f"step {n:5d}  loss {loss:.4f}  "
+                      f"{np.mean(t_hist[-args.log_every:]):.3f}s/step", flush=True)
+            return params, opt, metrics
+
+        rcfg = RunConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every,
+                         inject_failure_at=args.inject_failure_at)
+        (params, opt), run = run_training(wrapped, (params, opt), batch_at, rcfg)
+        print(f"done: {run.steps_run} steps, {run.restarts} restarts, "
+              f"{run.straggler_events} straggler events")
+    return params, opt
+
+
+if __name__ == "__main__":
+    main()

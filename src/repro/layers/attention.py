@@ -1,0 +1,379 @@
+"""Attention: GQA with qk-norm, RoPE/M-RoPE, sliding window, chunked flash.
+
+``flash_attention`` is a pure-jnp double-blocked (q-blocks × kv-blocks) online
+softmax — memory-bounded for 32k-token prefill on a per-device activation
+budget (DESIGN.md §4).  The decode path uses a KV cache; sliding-window archs
+get a ring-buffer cache of ``window`` slots.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                window: int | None) -> jax.Array:
+    """(Bq, Bk) boolean mask: True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_positions: jax.Array, k_positions: jax.Array,
+                    causal: bool = True, window: int | None = None,
+                    q_block: int = 512, kv_block: int = 512) -> jax.Array:
+    """Online-softmax blocked attention with a flash backward (scores are
+    recomputed block-wise in the VJP — O(S) residuals, never O(S²)).
+
+    q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd) — Hq % Hkv == 0 (GQA).
+    positions: (Sq,) / (Sk,) absolute positions for masking.
+    Returns (B, Sq, Hq, hd).
+    """
+    out, _ = _flash_fwd_inner(q, k, v, q_positions, k_positions, causal,
+                              window, q_block, kv_block)
+    return out
+
+
+def _visible_pairs(nq, nk, qb, kb, causal, window):
+    """Static list of (q-block, kv-block) pairs that can contain unmasked
+    entries, assuming positions are contiguous aranges (train/prefill).
+    Fully-masked blocks are SKIPPED — this is where SWA/causal earn their
+    sub-quadratic cost (block-skipping flash)."""
+    pairs = []
+    for i in range(nq):
+        q_lo, q_hi = i * qb, (i + 1) * qb - 1
+        for j in range(nk):
+            k_lo, k_hi = j * kb, (j + 1) * kb - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi < q_lo - window + 1:
+                continue
+            pairs.append((i, j))
+    return pairs
+
+
+def _flash_fwd_inner(q, k, v, q_positions, k_positions, causal, window,
+                     q_block, kv_block):
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    qb, kb = min(q_block, sq), min(kv_block, sk)
+    nq, nk = sq // qb, sk // kb
+    assert sq % qb == 0 and sk % kb == 0, (sq, qb, sk, kb)
+
+    qr = jnp.moveaxis(q.reshape(b, nq, qb, hkv, g, hd), 1, 0)   # (nq,b,qb,hkv,g,hd)
+    kr = jnp.moveaxis(k.reshape(b, nk, kb, hkv, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kb, hkv, hd), 1, 0)
+    qp = q_positions.reshape(nq, qb)
+    kp = k_positions.reshape(nk, kb)
+    pairs = jnp.array(_visible_pairs(nq, nk, qb, kb, causal, window),
+                      jnp.int32)
+
+    def pair_step(carry, pair):
+        acc, m_run, l_run = carry                        # (nq, b, hkv, g, qb, ...)
+        i, j = pair[0], pair[1]
+        qc = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kr, j, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vr, j, 0, keepdims=False)
+        qpos = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+        kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
+        mask = _block_mask(qpos, kpos, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_i = jax.lax.dynamic_index_in_dim(m_run, i, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l_run, i, 0, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
+        a_new = a_i * corr[..., None].astype(a_i.dtype) + pv
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        m_run = jax.lax.dynamic_update_index_in_dim(m_run, m_new, i, 0)
+        l_run = jax.lax.dynamic_update_index_in_dim(l_run, l_new, i, 0)
+        return (acc, m_run, l_run), None
+
+    acc0 = jnp.zeros((nq, b, hkv, g, qb, hd), v.dtype)
+    m0 = jnp.full((nq, b, hkv, g, qb), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, hkv, g, qb), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(pair_step, (acc0, m0, l0), pairs)
+    l_safe = jnp.maximum(l_run, 1e-30)
+    o = acc / l_safe[..., None].astype(acc.dtype)        # (nq,b,hkv,g,qb,hd)
+    lse = m_run + jnp.log(l_safe)                        # (nq,b,hkv,g,qb)
+    out = jnp.moveaxis(o, 4, 2)                          # (nq,b,qb,hkv,g,hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, hkv, g, hd).reshape(b, sq, hq, hd)
+    lse = jnp.moveaxis(lse, 0, 1)                        # (b, nq, hkv, g, qb)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_positions, k_positions, causal, window, q_block,
+               kv_block):
+    out, lse = _flash_fwd_inner(q, k, v, q_positions, k_positions, causal,
+                                window, q_block, kv_block)
+    return out, (q, k, v, q_positions, k_positions, out, lse)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, q_positions, k_positions, out, lse = res
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    qb, kb = min(q_block, sq), min(kv_block, sk)
+    nq, nk = sq // qb, sk // kb
+
+    qr = jnp.moveaxis(q.reshape(b, nq, qb, hkv, g, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kb, hkv, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kb, hkv, hd), 1, 0)
+    dor = jnp.moveaxis(dout.reshape(b, nq, qb, hkv, g, hd), 1, 0)
+    outr = jnp.moveaxis(out.reshape(b, nq, qb, hkv, g, hd), 1, 0)
+    qp = q_positions.reshape(nq, qb)
+    kp = k_positions.reshape(nk, kb)
+    # D_i = rowsum(dout * out): (nq, b, qb, hkv, g)
+    delta = jnp.sum(dor.astype(jnp.float32) * outr.astype(jnp.float32), axis=-1)
+    lse_r = jnp.moveaxis(lse, 0, 1)                      # (nq, b, hkv, g, qb)
+    pairs = jnp.array(_visible_pairs(nq, nk, qb, kb, causal, window),
+                      jnp.int32)
+
+    def pair_step(carry, pair):
+        dq_a, dk_a, dv_a = carry
+        i, j = pair[0], pair[1]
+        qc = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
+        doc = jax.lax.dynamic_index_in_dim(dor, i, 0, keepdims=False)
+        oc_lse = jax.lax.dynamic_index_in_dim(lse_r, i, 0, keepdims=False)
+        dlt = jax.lax.dynamic_index_in_dim(delta, i, 0, keepdims=False)
+        qpos = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kr, j, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vr, j, 0, keepdims=False)
+        kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
+        mask = _block_mask(qpos, kpos, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - oc_lse[..., None])               # (b,hkv,g,qb,kb)
+        dv = jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(doc.dtype), doc)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc).astype(jnp.float32)
+        dlt_t = jnp.moveaxis(dlt, 1, 3)                  # (b,hkv,g,qb)
+        ds = p * (dp - dlt_t[..., None]) * scale
+        dq = jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kc.dtype), kc)
+        dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qc.dtype), qc)
+        dq_i = jax.lax.dynamic_index_in_dim(dq_a, i, 0, keepdims=False)
+        dq_a = jax.lax.dynamic_update_index_in_dim(
+            dq_a, dq_i + dq.astype(jnp.float32), i, 0)
+        dk_j = jax.lax.dynamic_index_in_dim(dk_a, j, 0, keepdims=False)
+        dk_a = jax.lax.dynamic_update_index_in_dim(
+            dk_a, dk_j + dk.astype(jnp.float32), j, 0)
+        dv_j = jax.lax.dynamic_index_in_dim(dv_a, j, 0, keepdims=False)
+        dv_a = jax.lax.dynamic_update_index_in_dim(
+            dv_a, dv_j + dv.astype(jnp.float32), j, 0)
+        return (dq_a, dk_a, dv_a), None
+
+    dq0 = jnp.zeros((nq, b, qb, hkv, g, hd), jnp.float32)
+    dk0 = jnp.zeros((nk, b, kb, hkv, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kb, hkv, hd), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(pair_step, (dq0, dk0, dv0), pairs)
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, sq, hq, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, sk, hkv, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(b, sk, hkv, hd).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def sharded_flash_attention(q, k, v, q_positions, k_positions, *, mesh,
+                            data_axes, model_axis="model", causal=True,
+                            window=None, q_block=512, kv_block=512,
+                            q_norm=None, k_norm=None, rope_theta=None,
+                            mrope_sections=None, rope_positions=None):
+    """Head-parallel flash attention under shard_map — collectives provably
+    outside the flash loops (GSPMD guesses badly when n_kv < model size).
+
+    q heads are sharded over ``model_axis`` (zero-padded up to a multiple);
+    k/v are replicated over it; each shard gathers the kv heads its local q
+    heads need (g=1 inside the shard).  Batch shards over ``data_axes``.
+    qk-norm and RoPE run INSIDE the shard so their f32 intermediates (and
+    their cotangents) never materialise at full width.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    m = mesh.shape[model_axis]
+    hq_pad = -(-hq // m) * m
+    if hq_pad != hq:
+        q = jnp.concatenate(
+            [q, jnp.zeros((b, sq, hq_pad - hq, hd), q.dtype)], axis=2)
+    hl = hq_pad // m
+    # kv head of each (global) q head, padded heads clamped
+    kv_of_head = jnp.minimum(jnp.arange(hq_pad) // g, hkv - 1)
+    qn = q_norm if q_norm is not None else jnp.zeros((0,), q.dtype)
+    kn = k_norm if k_norm is not None else jnp.zeros((0,), q.dtype)
+    rp = rope_positions if rope_positions is not None else jnp.zeros((0,), jnp.int32)
+
+    def inner(ql, kl, vl, qp, kp, qn, kn, rp):
+        if q_norm is not None:
+            ql = rms_norm(ql, qn)
+            kl = rms_norm(kl, kn)
+        if rope_theta is not None:
+            if mrope_sections is not None:
+                ql = apply_mrope(ql, rp, mrope_sections, rope_theta)
+                kl = apply_mrope(kl, rp, mrope_sections, rope_theta)
+            else:
+                ql = apply_rope(ql, rp, rope_theta)
+                kl = apply_rope(kl, rp, rope_theta)
+        r = jax.lax.axis_index(model_axis)
+        idx = jax.lax.dynamic_slice_in_dim(kv_of_head, r * hl, hl)
+        ks = jnp.take(kl, idx, axis=2)          # (b_l, sk, hl, hd)
+        vs = jnp.take(vl, idx, axis=2)
+        return flash_attention(ql, ks, vs, qp, kp, causal, window,
+                               q_block, kv_block)
+
+    q_spec = P(data_axes, None, model_axis, None)
+    kv_spec = P(data_axes, None, None, None)
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(q_spec, kv_spec, kv_spec, P(None), P(None),
+                             P(None), P(None),
+                             P(*([None] * rp.ndim))),
+                   out_specs=q_spec, check_vma=False)
+    out = fn(q, k, v, q_positions, k_positions, qn, kn, rp)
+    return out[:, :, :hq]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, Hkv, hd) — C = min(max_len, window)
+    v: jax.Array
+    length: jax.Array     # () int32 — tokens seen so far
+    max_len: int          # logical max positions (static)
+
+    @property
+    def ring(self) -> bool:
+        return self.k.shape[1] < self.max_len
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype, window: int | None = None) -> KVCache:
+    c = max_len if window is None else min(window, max_len)
+    return KVCache(jnp.zeros((batch, c, n_kv, head_dim), dtype),
+                   jnp.zeros((batch, c, n_kv, head_dim), dtype),
+                   jnp.zeros((), jnp.int32), max_len)
+
+
+def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Append one step (B, 1, Hkv, hd); ring-buffer write when windowed."""
+    c = cache.k.shape[1]
+    pos = cache.length % c
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, pos, 0, 0))
+    return KVCache(k, v, cache.length + 1, cache.max_len)
+
+
+def decode_attention(q: jax.Array, cache: KVCache,
+                     window_len: jax.Array | int | None = None) -> jax.Array:
+    """One-token attention against the cache.  q: (B, 1, Hq, hd).
+    ``window_len`` additionally masks slots older than the window (hybrid
+    archs whose cache is allocated at full length for the global layers)."""
+    b, _, hq, hd = q.shape
+    hkv = cache.k.shape[2]
+    g = hq // hkv
+    c = cache.k.shape[1]
+    scale = hd ** -0.5
+    qr = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, cache.k).astype(jnp.float32) * scale
+    # valid slots: ring buffer holds the last min(length, C) positions
+    slot = jnp.arange(c)
+    n_valid = jnp.minimum(cache.length, c)
+    wrap = cache.length % c
+    age = (wrap - 1 - slot) % c      # 0 = newest
+    valid = age < n_valid
+    if window_len is not None:
+        valid &= age < window_len
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v)
+    return out.reshape(b, 1, hq, hd)
+
+
+# ------------------------------------------------------------- GQA block ----
+
+def gqa_project(x, wq, wk, wv, n_heads, n_kv, head_dim,
+                q_norm_scale=None, k_norm_scale=None):
+    """Project + per-head qk-norm (Qwen3). x: (B, S, d)."""
+    b, s, _ = x.shape
+    q = (x @ wq).reshape(b, s, n_heads, head_dim)
+    k = (x @ wk).reshape(b, s, n_kv, head_dim)
+    v = (x @ wv).reshape(b, s, n_kv, head_dim)
+    if q_norm_scale is not None:
+        q = rms_norm(q, q_norm_scale)
+        k = rms_norm(k, k_norm_scale)
+    return q, k, v
+
+
+def attention_block(x, params, *, n_heads, n_kv, head_dim, rope_theta,
+                    positions, causal=True, window=None, qk_norm=False,
+                    mrope_sections=None, kv_override=None, shard_ctx=None):
+    """Full attention sub-block (pre-norm handled by caller).
+
+    ``kv_override``: (k, v) for cross-attention (encoder memory).
+    ``shard_ctx``: optional (mesh, data_axes, model_axis) — runs the flash
+    core (and qk-norm + RoPE) head-parallel under shard_map so collectives
+    stay outside its loops.
+    """
+    is_causal = causal and kv_override is None
+    mask_pos = positions[0] if mrope_sections is not None else positions
+    if shard_ctx is not None and kv_override is None:
+        mesh, data_axes, model_axis = shard_ctx
+        q, k, v = gqa_project(x, params["wq"], params["wk"], params["wv"],
+                              n_heads, n_kv, head_dim)
+        out = sharded_flash_attention(
+            q, k, v, mask_pos, mask_pos, mesh=mesh, data_axes=data_axes,
+            model_axis=model_axis, causal=is_causal, window=window,
+            q_norm=params.get("q_norm") if qk_norm else None,
+            k_norm=params.get("k_norm") if qk_norm else None,
+            rope_theta=rope_theta, mrope_sections=mrope_sections,
+            rope_positions=positions)
+        b, s, _, _ = out.shape
+        return out.reshape(b, s, n_heads * head_dim) @ params["wo"]
+
+    q, k, v = gqa_project(
+        x, params["wq"], params["wk"], params["wv"], n_heads, n_kv, head_dim,
+        params.get("q_norm") if qk_norm else None,
+        params.get("k_norm") if qk_norm else None)
+    if kv_override is not None:
+        k, v = kv_override
+        k_positions = jnp.arange(k.shape[1])
+    else:
+        if mrope_sections is not None:
+            q = apply_mrope(q, positions, mrope_sections, rope_theta)
+            k = apply_mrope(k, positions, mrope_sections, rope_theta)
+        else:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        k_positions = mask_pos
+    q_positions = mask_pos
+    if shard_ctx is not None:
+        mesh, data_axes, model_axis = shard_ctx
+        out = sharded_flash_attention(
+            q, k, v, q_positions, k_positions, mesh=mesh, data_axes=data_axes,
+            model_axis=model_axis, causal=is_causal, window=window)
+    else:
+        out = flash_attention(q, k, v, q_positions, k_positions,
+                              causal=is_causal, window=window)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, n_heads * head_dim) @ params["wo"]

@@ -1,0 +1,71 @@
+"""Shared building blocks: norms, rotary embeddings, dense MLPs, init."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- rotary ----
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e6) -> jax.Array:
+    """Standard RoPE. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    angles = angles[..., None, :]                                # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 1e6) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: (3, ..., S) — temporal/height/width
+    ids; ``sections`` splits the hd/2 frequency slots among the three axes."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                # (hd/2,)
+    # section s of the frequency slots rotates by positions[s]
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=hd // 2)
+    pos3 = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)    # (..., S, 3)
+    pos = pos3[..., sec_id]                                      # (..., S, hd/2)
+    angles = pos * freqs                                          # (..., S, hd/2)
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP -----
+
+def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ----------------------------------------------------------------- init -----
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,60 @@
+"""Hymba hybrid-head mixer: parallel attention + SSM heads [arXiv:2411.13676].
+
+Both sub-mixers see the same (normed) input; outputs are per-branch
+RMS-normalised, averaged, and projected.  Most layers use sliding-window
+attention, a few use global attention (per-layer flag fed through the layer
+scan).  Hymba's learnable meta-tokens are omitted (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import attention_block, decode_attention, cache_update, KVCache
+from repro.layers.common import rms_norm
+from repro.layers.ssm import SsmState, mamba2_mixer
+
+
+def hymba_mixer(x, params, *, n_heads, n_kv, head_dim, rope_theta, positions,
+                window, is_global, ssm_args, attn_cache: KVCache | None = None,
+                ssm_state: SsmState | None = None, single_step: bool = False,
+                shard_ctx=None, mid_spec=None):
+    """x: (B, S, d). ``is_global`` is a traced scalar bool (per-layer flag):
+    window masking is applied via a where over the two mask variants."""
+    # --- attention branch (window chosen dynamically via mask positions) ----
+    if single_step:
+        from repro.layers.attention import gqa_project
+        from repro.layers.common import apply_rope
+        q, k, v = gqa_project(x, params["attn"]["wq"], params["attn"]["wk"],
+                              params["attn"]["wv"], n_heads, n_kv, head_dim)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        attn_cache = cache_update(attn_cache, k, v)
+        wl = None if window is None else jnp.where(is_global, attn_cache.k.shape[1], window)
+        a = decode_attention(q, attn_cache, window_len=wl)
+        b, s, _, _ = a.shape
+        attn_out = a.reshape(b, s, n_heads * head_dim) @ params["attn"]["wo"]
+    else:
+        def run(w):
+            return attention_block(
+                x, params["attn"], n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+                rope_theta=rope_theta, positions=positions, causal=True, window=w,
+                shard_ctx=shard_ctx)
+        if isinstance(is_global, bool):
+            # static flag (segmented layer scan): single branch, and the
+            # block-skipping flash drops out-of-window blocks entirely
+            attn_out = run(None if is_global else window)
+        else:
+            attn_out = jax.lax.cond(is_global, lambda: run(None),
+                                    lambda: run(window))
+
+    # --- SSM branch ----------------------------------------------------------
+    ssm_out, new_ssm = mamba2_mixer(
+        x, params["ssm"], state=ssm_state, single_step=single_step,
+        mid_spec=mid_spec, **ssm_args)
+
+    # --- fuse: normalised average (Hymba eq. 5 simplified) -------------------
+    y = 0.5 * (rms_norm(attn_out, params["attn_out_norm"]) +
+               rms_norm(ssm_out, params["ssm_out_norm"]))
+    return y, attn_cache, new_ssm

@@ -1,0 +1,73 @@
+"""MoE layer — FUSCO-integrated expert-parallel feed-forward.
+
+The shard_map island: dense parts of the model run under GSPMD; the token
+shuffle runs manually over the expert-parallel axes with the engine picked by
+``DcommConfig`` (fused_flat / fused_hier / disagg / ragged).  This is the
+"thin adaptation layer" of paper §4.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dcomm import DcommConfig
+from repro.core.routing import ExpertPlacement
+from repro.core import fusco
+
+
+def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
+              dcfg: DcommConfig, top_k: int, data_axes=("data",),
+              norm_topk: bool = True, fsdp: bool = False) -> jax.Array:
+    """x: (B, S, d) global. Expert weights sharded over the EP axes.
+
+    Weight layout: w1/w3 (E_lanes, E_local, d, f), w2 (E_lanes, E_local, f, d)
+    where E_lanes = placement.ep — lane-major so a plain PartitionSpec shards
+    them (replicated experts appear once per hosting lane).
+    """
+    ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
+    ep_axes = tuple(ep_axes)
+    x_spec = P(data_axes, ep_axes, None)          # batch over data, seq over EP
+    if fsdp:
+        # ZeRO-3 expert weights: stored sharded over the data axis, gathered
+        # just-in-time inside the island (mixtral-class expert sizes).
+        w_spec = P(ep_axes, None, None, "data")
+        w2_spec = P(ep_axes, None, "data", None)
+    else:
+        w_spec = w2_spec = P(ep_axes, None, None, None)
+    r_spec = P(None, None)
+
+    def inner(xl, wr, w1, w3, w2):
+        if fsdp:
+            w1 = jax.lax.all_gather(w1, "data", axis=3, tiled=True)
+            w3 = jax.lax.all_gather(w3, "data", axis=3, tiled=True)
+            w2 = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
+        b, s, d = xl.shape
+        xt = xl.reshape(b * s, d)
+        y = fusco.moe_shuffle_ffn(
+            xt, wr, w1[0], w3[0], w2[0], placement, dcfg, top_k,
+            norm_topk=norm_topk)
+        return y.reshape(b, s, d)
+
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec),
+                   out_specs=x_spec, check_vma=False)
+    return fn(x, moe_params["router"], moe_params["w1"], moe_params["w3"],
+              moe_params["w2"])
+
+
+def lane_major_expert_weights(w_all: jax.Array, placement: ExpertPlacement) -> jax.Array:
+    """(E, d, f) canonical expert weights -> (ep, E_local, d, f) lane-major
+    layout (replicated experts duplicated per hosting lane)."""
+    lanes = []
+    for lane in range(placement.ep):
+        if placement.n_experts >= placement.ep:
+            lo = lane * placement.experts_per_lane
+            lanes.append(w_all[lo:lo + placement.experts_per_lane])
+        else:
+            lanes.append(w_all[lane % placement.n_experts][None])
+    return jnp.stack(lanes)

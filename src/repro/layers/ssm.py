@@ -1,0 +1,171 @@
+"""Mamba2 — State-Space Duality (SSD) mixer [arXiv:2405.21060].
+
+Chunked SSD: sequence split into chunks; quadratic attention-like compute
+inside each chunk (MXU-friendly) + a linear inter-chunk recurrence on the
+(H, P, N) states via ``lax.associative_scan``.  Decode is the O(1) recurrent
+update — the reason ``long_500k`` is runnable for SSM archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import rms_norm
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular cumulative sums: out[..., i, j] = sum a[..., j+1..i]."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), jnp.bool_), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, init_state: jax.Array | None = None):
+    """SSD forward.
+
+    x:     (B, S, H, P)   inputs (already conv'd/gated by caller)
+    a_log: (B, S, H)      per-step log decay (negative)
+    b, c:  (B, S, G, N)   input/output projections (G groups broadcast to H)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xr = x.reshape(bs, nc, chunk, h, p)
+    ar = a_log.reshape(bs, nc, chunk, h)
+    br = b.reshape(bs, nc, chunk, g, n)
+    cr = c.reshape(bs, nc, chunk, g, n)
+    brh = jnp.repeat(br, rep, axis=3)                       # (B,nc,q,H,N)
+    crh = jnp.repeat(cr, rep, axis=3)
+
+    a_cum = jnp.cumsum(ar, axis=2)                          # (B,nc,q,H)
+
+    # 1. intra-chunk (diagonal blocks)
+    ldec = jnp.exp(segsum(jnp.moveaxis(ar, -1, 2)))         # (B,nc,H,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", crh, brh)
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                        scores, ldec.astype(scores.dtype), xr)
+
+    # 2. per-chunk states: contribution of each chunk to its final state
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)     # (B,nc,q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        brh, decay_to_end.astype(x.dtype), xr)
+
+    # 3. inter-chunk recurrence: S_c = S_{c-1} * exp(A_c) + states_c
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])               # (B,nc,H)
+
+    if init_state is None:
+        init_state = jnp.zeros((bs, h, p, n), x.dtype)
+
+    def scan_op(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s2 + s1 * d2[..., None, None].astype(s1.dtype)
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,B,H)
+    sts = jnp.moveaxis(states, 1, 0)                        # (nc,B,H,P,N)
+    # prepend the initial state as a virtual chunk
+    decs = jnp.concatenate([jnp.ones_like(decs[:1]), decs], axis=0)
+    sts = jnp.concatenate([init_state[None], sts], axis=0)
+    _, cum_states = jax.lax.associative_scan(scan_op, (decs, sts), axis=0)
+    prev_states = jnp.moveaxis(cum_states[:-1], 0, 1)       # state BEFORE chunk c
+    final_state = cum_states[-1]
+
+    # 4. state -> output within each chunk
+    in_decay = jnp.exp(a_cum)                               # (B,nc,q,H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                       crh, in_decay.astype(x.dtype), prev_states)
+
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state: jax.Array, x_t: jax.Array, a_log_t: jax.Array,
+                    b_t: jax.Array, c_t: jax.Array):
+    """One-token recurrence.  state: (B,H,P,N); x_t: (B,H,P);
+    a_log_t: (B,H); b_t/c_t: (B,G,N)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_t, rep, axis=1)                       # (B,H,N)
+    ch = jnp.repeat(c_t, rep, axis=1)
+    decay = jnp.exp(a_log_t)[..., None, None].astype(state.dtype)
+    state = state * decay + jnp.einsum("bhp,bhn->bhpn", x_t, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+    return state, y
+
+
+# -------------------------------------------------------------- full block --
+
+class SsmState(NamedTuple):
+    ssd: jax.Array        # (B, H, P, N)
+    conv: jax.Array       # (B, K-1, conv_dim) last inputs for causal conv
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, prev: jax.Array | None = None):
+    """Depthwise causal conv as K shifted multiplies (no (B,S,K,C) window
+    materialisation).  x: (B, S, C); w: (K, C).  Returns (y, new_prev)."""
+    k = w.shape[0]
+    s_len = x.shape[1]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + s_len] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(y), xp[:, -(k - 1):] if k > 1 else prev
+
+
+def mamba2_mixer(x: jax.Array, params, *, d_inner: int, n_heads: int,
+                 head_dim: int, d_state: int, n_groups: int, chunk: int,
+                 state: SsmState | None = None, single_step: bool = False,
+                 mid_spec=None):
+    """Full Mamba2 mixer: in_proj → conv → SSD → gated norm → out_proj.
+
+    x: (B, S, d_model).  Returns (y (B,S,d_model), new_state).
+    ``mid_spec``: optional PartitionSpec pinning the column-sharded inner
+    layout so the SSD scan stays collective-free.
+    """
+    b, s, _ = x.shape
+    conv_dim = d_inner + 2 * n_groups * d_state
+    # z/xbc projection is mesh-aligned and column-sharded; the tiny dt head
+    # projection stays replicated (its width rarely divides the mesh).
+    zxbc = x @ params["in_proj_zx"]                         # (B,S, din + conv)
+    if mid_spec is not None:
+        zxbc = jax.lax.with_sharding_constraint(zxbc, mid_spec)
+    dt = x @ params["in_proj_dt"]                           # (B,S,H)
+    z, xbc = jnp.split(zxbc, [d_inner], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])            # (B,S,H)
+
+    prev_conv = state.conv if state is not None else None
+    xbc, new_conv = causal_conv1d(xbc, params["conv_w"], prev_conv)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n_groups * d_state], axis=-1)
+    xh = xs.reshape(b, s, n_heads, head_dim)
+    bm = bmat.reshape(b, s, n_groups, d_state)
+    cm = cmat.reshape(b, s, n_groups, d_state)
+    a = -jnp.exp(params["a_log"])                           # (H,) negative
+    a_log = dt * a[None, None, :]                           # (B,S,H) log decay
+    xin = xh * dt[..., None].astype(xh.dtype)               # dt-scaled input
+
+    if single_step:
+        assert s == 1
+        st0 = state.ssd if state is not None else jnp.zeros(
+            (b, n_heads, head_dim, d_state), x.dtype)
+        new_ssd, yh = ssd_decode_step(st0, xin[:, 0], a_log[:, 0], bm[:, 0], cm[:, 0])
+        y = yh[:, None]
+    else:
+        st0 = state.ssd if state is not None else None
+        y, new_ssd = ssd_chunked(xin, a_log, bm, cm, chunk, st0)
+
+    y = y + xh * params["d_skip"][None, None, :, None]      # D skip connection
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])        # gated RMSNorm
+    out = y @ params["out_proj"]
+    return out, SsmState(new_ssd, new_conv)

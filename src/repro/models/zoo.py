@@ -1,0 +1,128 @@
+"""Model zoo: one uniform interface over all assigned architectures.
+
+Provides per-arch init / loss / prefill / decode plus ``input_specs`` — the
+ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell (no device
+allocation; weak-type correct; shardable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec_model, lm
+from repro.models.lm import ModelContext
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    ctx: ModelContext
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], tuple]
+    prefill: Callable | None
+    decode_step: Callable | None
+
+
+def build(cfg: ArchConfig, ctx: ModelContext) -> ModelBundle:
+    if cfg.family == "encdec":
+        return ModelBundle(
+            cfg, ctx,
+            init=lambda key: encdec_model.init_params(cfg, key, ctx),
+            loss=lambda p, b: encdec_model.encdec_loss(p, b, ctx),
+            prefill=lambda p, b, max_len: encdec_model.prefill(
+                p, b["frames"], b["tokens"], ctx, max_len),
+            decode_step=lambda p, st, tok, max_len: encdec_model.decode_step(
+                p, st, tok, ctx, max_len))
+    return ModelBundle(
+        cfg, ctx,
+        init=lambda key: lm.init_params(cfg, key, ctx),
+        loss=lambda p, b: lm.lm_loss(p, b, ctx),
+        prefill=lambda p, b, max_len: lm.prefill(
+            p, b.get("embeds", b.get("tokens")),
+            b.get("positions", jnp.arange(
+                b.get("embeds", b.get("tokens")).shape[1])), ctx, max_len),
+        decode_step=lambda p, st, tok, max_len: lm.decode_step(
+            p, st, tok, ctx, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch × shape) — dry-run stand-ins
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the lowered step of this cell.
+
+    train:   the train_step batch
+    prefill: the serve-prefill request batch
+    decode:  the one-token decode inputs (cache specs come from
+             ``decode_state_specs``)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        se, sd = s // 2, s // 2
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((b, se, cfg.d_model), BF16),
+                    "tokens": jax.ShapeDtypeStruct((b, sd), I32),
+                    "labels": jax.ShapeDtypeStruct((b, sd), I32)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((b, se, cfg.d_model), BF16),
+                    "tokens": jax.ShapeDtypeStruct((b,), I32)}
+        return {"tokens": jax.ShapeDtypeStruct((b,), I32)}
+
+    if cfg.family == "vlm":
+        # vision stub: precomputed patch embeddings + 3D M-RoPE position ids
+        if shape.kind == "train":
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), BF16),
+                    "positions": jax.ShapeDtypeStruct((3, s), I32),
+                    "labels": jax.ShapeDtypeStruct((b, s), I32)}
+        if shape.kind == "prefill":
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), BF16),
+                    "positions": jax.ShapeDtypeStruct((3, s), I32)}
+        return {"tokens": jax.ShapeDtypeStruct((b,), I32)}
+
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), I32),
+                "labels": jax.ShapeDtypeStruct((b, s), I32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), I32)}
+    return {"tokens": jax.ShapeDtypeStruct((b,), I32)}
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeConfig, ctx: ModelContext):
+    """Abstract decode-state (KV cache / SSM state) for decode cells."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        se = s // 2
+
+        def mk():
+            kv = {"k": jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd), BF16),
+                  "v": jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd), BF16)}
+            ck = jnp.zeros((cfg.n_layers, b, se, cfg.n_kv_heads, cfg.hd), BF16)
+            return encdec_model.EncDecState(kv, ck, ck, jnp.zeros((), I32))
+        return jax.eval_shape(mk)
+    return jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, b, s, BF16, ctx))
+
+
+def make_smoke_batch(cfg: ArchConfig, key, batch: int = 4, seq: int = 32):
+    """Small concrete batch for CPU smoke tests (reduced configs)."""
+    ks = jax.random.split(key, 3)
+    if cfg.family == "encdec":
+        se = sd = seq
+        return {"frames": jax.random.normal(ks[0], (batch, se, cfg.d_model), F32),
+                "tokens": jax.random.randint(ks[1], (batch, sd), 0, cfg.vocab),
+                "labels": jax.random.randint(ks[2], (batch, sd), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        pos = jnp.stack([jnp.arange(seq)] * 3)
+        return {"embeds": jax.random.normal(ks[0], (batch, seq, cfg.d_model), F32),
+                "positions": pos,
+                "labels": jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab)}
+    return {"tokens": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab),
+            "labels": jax.random.randint(ks[2], (batch, seq), 0, cfg.vocab)}

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback (beyond-paper optimization).
+
+Int8 per-block uniform quantisation for cross-pod gradient reduction: on
+slow inter-pod links, grads are quantised before the pod-axis all-reduce and
+the quantisation error is fed back into the next step (EF-SGD style), which
+keeps convergence unbiased in expectation.  4× wire reduction on the slow
+tier; used optionally by the multi-pod trainer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: Any          # pytree like grads, f32
+
+
+def init_error(grads) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def quantize(x: jax.Array, block: int = 256):
+    """Per-block symmetric int8. Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, block: int = 256):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads, ef: EFState, block: int = 256):
+    """grads + error feedback -> (leaves [(q, scale)], treedef, new EF)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    errs = jax.tree_util.tree_flatten(ef.error)[0]
+    qs, new_err = [], []
+    for g, e in zip(leaves, errs):
+        val = g.astype(jnp.float32) + e
+        q, s = quantize(val, block)
+        deq = dequantize(q, s, g.shape, block)
+        qs.append((q, s))
+        new_err.append(val - deq)
+    return qs, treedef, EFState(jax.tree_util.tree_unflatten(treedef, new_err))
+
+
+def decompress_grads(qs, treedef, like_leaves, block: int = 256):
+    outs = [dequantize(q, s, ref.shape, block).astype(ref.dtype)
+            for (q, s), ref in zip(qs, like_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, outs)

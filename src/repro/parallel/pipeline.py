@@ -1,0 +1,73 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+For 1000+-node scaling where the DP batch is exhausted, layers are split into
+``n_stages`` groups placed along a mesh axis (usually ``pod``); microbatches
+stream through with ``collective_permute`` hops between neighbouring stages.
+The schedule is the classic fill-run-drain loop expressed as one ``lax.scan``
+inside ``shard_map``: at tick t, stage s processes microbatch (t - s).
+
+The stage body is arbitrary (a stack of layers); weights live stage-sharded
+(leading stage dim over the pipeline axis).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
+                   *, mesh, axis: str = "pod"):
+    """Run ``n_micro`` microbatches through ``n_stages`` pipeline stages.
+
+    stage_fn(params_stage, x) -> y   (same shape as x)
+    stage_params: pytree with leading stage dim, sharded over ``axis``.
+    x_microbatches: (n_micro, mb, ...) — replicated over ``axis``.
+    Returns (n_micro, mb, ...) outputs of the LAST stage.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_microbatches.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    def inner(params, xs):
+        params = jax.tree.map(lambda p: p[0], params)   # this stage's slice
+        s = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        state = jnp.zeros(mb_shape, xs.dtype)            # stage input register
+
+        def tick(carry, t):
+            state, outs = carry
+            # stage 0 ingests microbatch t (when in range)
+            feed = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False)
+            inp = jnp.where(s == 0, feed, state)
+            out = stage_fn(params, inp)
+            # pass to the next stage: rank r receives from r-1
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            nxt = jax.lax.ppermute(out, axis, perm)
+            # last stage emits microbatch (t - (n_stages - 1))
+            emit_idx = t - (n_stages - 1)
+            outs = jax.lax.cond(
+                emit_idx >= 0,
+                lambda o: o.at[jnp.maximum(emit_idx, 0)].set(out),
+                lambda o: o, outs)
+            return (nxt, outs), None
+
+        outs0 = jnp.zeros((n_micro,) + mb_shape, xs.dtype)
+        (_, outs), _ = jax.lax.scan(tick, (state, outs0), jnp.arange(ticks))
+        # only the LAST stage's `outs` is real; broadcast via masked psum
+        outs = jax.lax.psum(
+            jnp.where(s == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    fn = shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False)
+    return fn(stage_params, x_microbatches)

@@ -1,0 +1,89 @@
+"""Explicit Megatron-SP tensor-parallel blocks under shard_map.
+
+GSPMD occasionally materialises f32 full-sequence gradients and all-reduces
+them per layer (observed in the dry-run HLO).  These blocks pin the classic
+schedule explicitly — per sub-block exactly one bf16 all-gather of the
+sequence-sharded activations in and one bf16 reduce-scatter of the partial
+outputs back — so forward AND backward collectives are fixed by construction.
+
+Used when the head count divides the model axis (DESIGN.md §Perf notes);
+other archs keep the GSPMD + sharded-flash path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.attention import flash_attention
+from repro.layers.common import apply_rope, rms_norm
+
+
+def megatron_attention(x, p, *, mesh, data_axes, n_heads, n_kv, head_dim,
+                       rope_theta, positions, causal=True, window=None,
+                       qk_norm=False, return_kv=False):
+    """x: (B, S, d) sequence-sharded over 'model'.  Returns y (same spec)
+    [+ roped k, v replicated] — AG in, psum-scatter out."""
+    m = mesh.shape["model"]
+    assert n_heads % m == 0, (n_heads, m)
+    hl = n_heads // m
+    g = n_heads // n_kv
+    # kv head used by each local q head (g=1 inside the shard)
+    kv_of_head = jnp.arange(n_heads) // g
+
+    qn = p.get("q_norm") if qk_norm else jnp.zeros((0,), x.dtype)
+    kn = p.get("k_norm") if qk_norm else jnp.zeros((0,), x.dtype)
+
+    def inner(x_loc, wq, wk, wv, wo, qn, kn, pos):
+        b = x_loc.shape[0]
+        xg = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
+        s = xg.shape[1]
+        q = (xg @ wq).reshape(b, s, hl, head_dim)
+        k = (xg @ wk).reshape(b, s, n_kv, head_dim)
+        v = (xg @ wv).reshape(b, s, n_kv, head_dim)
+        if qk_norm:
+            q = rms_norm(q, qn)
+            k = rms_norm(k, kn)
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+        r = jax.lax.axis_index("model")
+        idx = jax.lax.dynamic_slice_in_dim(kv_of_head, r * hl, hl)
+        ks = jnp.take(k, idx, axis=2)
+        vs = jnp.take(v, idx, axis=2)
+        o = flash_attention(q, ks, vs, pos, pos, causal, window)
+        part = o.reshape(b, s, hl * head_dim) @ wo
+        y = jax.lax.psum_scatter(part, "model", scatter_dimension=1,
+                                 tiled=True)
+        if return_kv:
+            return y, k, v
+        return y
+
+    x_spec = P(data_axes, "model", None)
+    kv_rep = P(data_axes, None, None, None)
+    out_specs = (x_spec, kv_rep, kv_rep) if return_kv else x_spec
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(x_spec, P(None, "model"), P(None, None),
+                             P(None, None), P("model", None), P(None),
+                             P(None), P(None)),
+                   out_specs=out_specs, check_vma=False)
+    return fn(x, p["wq"], p["wk"], p["wv"], p["wo"], qn, kn, positions)
+
+
+def megatron_mlp(x, p, *, mesh, data_axes):
+    """SwiGLU MLP: AG in, column-parallel up, row-parallel down, RS out."""
+
+    def inner(x_loc, wg, wu, wd):
+        xg = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
+        h = jax.nn.silu(xg @ wg) * (xg @ wu)
+        part = h @ wd
+        return jax.lax.psum_scatter(part, "model", scatter_dimension=1,
+                                    tiled=True)
+
+    x_spec = P(data_axes, "model", None)
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(x_spec, P(None, "model"), P(None, "model"),
+                             P("model", None)),
+                   out_specs=x_spec, check_vma=False)
+    return fn(x, p["w_gate"], p["w_up"], p["w_down"])

@@ -1,0 +1,61 @@
+"""Elastic re-mesh: resume a checkpoint on a different device topology.
+
+When a pod (or slice) is lost, training continues on the surviving mesh:
+parameters/optimizer are restored from the committed checkpoint and
+device_put with the NEW mesh's shardings; the data pipeline rescales its
+per-host batch (global batch preserved by gradient accumulation when the
+data axis shrinks).  MoE expert placement is recomputed for the new EP width
+— lane-major expert weights are re-laid-out host-side.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpointer
+from repro.core.routing import ExpertPlacement
+
+
+def remesh_restore(ckpt_dir: str, like_tree, new_mesh, spec_tree,
+                   step: int | None = None):
+    """Restore ``like_tree`` from ``ckpt_dir`` resharded onto ``new_mesh``."""
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(new_mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return checkpointer.restore(ckpt_dir, like_tree, shardings, step)
+
+
+def relayout_expert_weights(w_lane_major: np.ndarray,
+                            old: ExpertPlacement,
+                            new: ExpertPlacement) -> np.ndarray:
+    """(old_ep, E_local_old, ...) lane-major weights -> new EP layout.
+
+    Reconstructs the canonical (E, ...) table from the old layout, then
+    re-lays it out for the new placement (replication handled both ways).
+    """
+    e = old.n_experts
+    canon = np.empty((e,) + w_lane_major.shape[2:], w_lane_major.dtype)
+    for lane in range(old.ep):
+        if old.n_experts >= old.ep:
+            lo = lane * old.experts_per_lane
+            canon[lo:lo + old.experts_per_lane] = w_lane_major[lane]
+        else:
+            canon[lane % e] = w_lane_major[lane, 0]
+    out = np.empty((new.ep, new.experts_per_lane) + canon.shape[1:], canon.dtype)
+    for lane in range(new.ep):
+        if new.n_experts >= new.ep:
+            lo = lane * new.experts_per_lane
+            out[lane] = canon[lo:lo + new.experts_per_lane]
+        else:
+            out[lane, 0] = canon[lane % e]
+    return out
+
+
+def accumulation_factor(old_data: int, new_data: int) -> int:
+    """Gradient-accumulation steps needed to preserve the global batch when
+    the data axis shrinks from old_data to new_data."""
+    if old_data % new_data != 0:
+        raise ValueError(f"{old_data} not divisible by {new_data}")
+    return old_data // new_data

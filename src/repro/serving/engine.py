@@ -1,0 +1,115 @@
+"""Batched serving engine: request queue + wave scheduler over the zoo's
+prefill/decode steps.
+
+Admission is *waved*: pending requests are padded to a common prompt length
+and prefilled as one batch (the FUSCO engines sit in this prefill path — the
+paper's TTFT metric), then decoded lock-step until every member finishes.
+Per-slot (continuous) admission would need per-row position counters in the
+decode state; recorded as future work in DESIGN.md — wave batching is what
+the serve_step dry-run cells model.
+
+Metrics: TTFT per request, decode tok/s, queue latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int
+    submitted_at: float = 0.0
+    ttft_s: Optional[float] = None
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, bundle, *, max_batch: int = 8, max_len: int = 256,
+                 eos_id: int | None = None, pad_id: int = 0):
+        self.bundle = bundle
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._next_id = 0
+        self._prefill = jax.jit(lambda p, b: bundle.prefill(p, b, max_len))
+        self._decode = jax.jit(
+            lambda p, st, t: bundle.decode_step(p, st, t, max_len))
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new,
+                                  submitted_at=time.perf_counter()))
+        return rid
+
+    def _form_wave(self) -> list[Request]:
+        wave = []
+        while self.queue and len(wave) < self.max_batch:
+            wave.append(self.queue.popleft())
+        return wave
+
+    def run_wave(self, params) -> list[Request]:
+        """Prefill + decode one wave to completion.  Returns finished reqs."""
+        wave = self._form_wave()
+        if not wave:
+            return []
+        s = max(len(r.prompt) for r in wave)
+        b = len(wave)
+        toks = np.full((b, s), self.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, s - len(r.prompt):] = r.prompt      # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+
+        t0 = time.perf_counter()
+        logits, state = self._prefill(params, batch)
+        jax.block_until_ready(logits)
+        ttft = time.perf_counter() - t0
+        for r in wave:
+            r.ttft_s = ttft + (t0 - r.submitted_at)
+
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        live = np.ones(b, bool)
+        steps = max(r.max_new for r in wave)
+        for step in range(steps):
+            tok_np = np.asarray(tok)
+            for i, r in enumerate(wave):
+                if not live[i]:
+                    continue
+                r.output.append(int(tok_np[i]))
+                if (len(r.output) >= r.max_new or
+                        (self.eos_id is not None and tok_np[i] == self.eos_id)):
+                    live[i] = False
+                    r.done = True
+            if not live.any() or step == steps - 1:
+                break
+            logits, state = self._decode(params, state, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for r in wave:
+            r.done = True
+        self.finished.extend(wave)
+        return wave
+
+    def stats(self) -> dict:
+        done = [r for r in self.finished if r.ttft_s is not None]
+        if not done:
+            return {}
+        return {
+            "requests": len(done),
+            "mean_ttft_s": float(np.mean([r.ttft_s for r in done])),
+            "p95_ttft_s": float(np.percentile([r.ttft_s for r in done], 95)),
+            "mean_tokens": float(np.mean([len(r.output) for r in done])),
+        }

@@ -1,0 +1,30 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+# Smoke tests and benches see the single real device; multi-device tests
+# spawn subprocesses with XLA_FLAGS (jax locks the device count at init).
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with n forced host devices."""
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
+           "PYTHONPATH": SRC}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{r.stdout[-3000:]}\n"
+            f"STDERR:\n{r.stderr[-3000:]}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_devices

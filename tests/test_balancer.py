@@ -1,0 +1,79 @@
+"""Online Load Balancer (paper Algorithm 1) tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balancer import (algorithm1_groups, brute_force_assignment,
+                                 forwarder_lane, group_loads, max_group_load,
+                                 static_assignment)
+
+
+def _loads(n, m, seed):
+    r = np.random.default_rng(seed)
+    return r.integers(0, 100, (n, m)).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 4), st.integers(0, 10_000))
+def test_algorithm1_is_valid_assignment(n, m, seed):
+    loads = jnp.array(_loads(n, m, seed))
+    a = np.asarray(algorithm1_groups(loads))
+    # each node's row is a permutation of groups -> one GPU per node per group
+    for row in a:
+        assert sorted(row.tolist()) == list(range(m))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_algorithm1_beats_or_matches_static_on_skew(seed):
+    """On skewed loads the greedy groups should not be worse than the
+    balancer-off static grouping (paper §5.4)."""
+    r = np.random.default_rng(seed)
+    n, m = 4, 4
+    base = r.integers(0, 10, (n, m)).astype(np.float32)
+    # skew: same local index hot on every node — static grouping's worst case
+    base[:, 0] += 100
+    loads = jnp.array(base)
+    greedy = float(max_group_load(loads, algorithm1_groups(loads)))
+    static = float(max_group_load(loads, static_assignment(n, m)))
+    assert greedy <= static + 1e-6
+
+
+def test_algorithm1_near_optimal_small():
+    for seed in range(5):
+        loads = _loads(3, 3, seed)
+        greedy = float(max_group_load(jnp.array(loads),
+                                      algorithm1_groups(jnp.array(loads))))
+        _, opt = brute_force_assignment(loads)
+        # greedy is a heuristic; allow 1.6x of optimum (observed << this)
+        assert greedy <= 1.6 * opt + 1e-6, (greedy, opt)
+
+
+def test_spreads_hottest_gpus():
+    # highest-load GPU of each node must land in a DIFFERENT group
+    loads = jnp.array(_loads(4, 4, 7))
+    a = np.asarray(algorithm1_groups(loads))
+    hottest = np.argmax(np.asarray(loads), axis=1)
+    groups_of_hottest = [a[n, hottest[n]] for n in range(4)]
+    assert len(set(groups_of_hottest)) == 4
+
+
+def test_forwarder_lane_consistency():
+    loads = jnp.array(_loads(3, 4, 11))
+    a = algorithm1_groups(loads)
+    an = np.asarray(a)
+    for my_node in range(3):
+        for my_lane in range(4):
+            fwd = np.asarray(forwarder_lane(
+                a, my_node, my_lane, jnp.arange(3)))
+            g = an[my_node, my_lane]
+            for dst in range(3):
+                assert an[dst, fwd[dst]] == g  # same communication group
+
+
+def test_group_loads_sum():
+    loads = jnp.array(_loads(3, 3, 2))
+    a = algorithm1_groups(loads)
+    gl = np.asarray(group_loads(loads, a))
+    assert np.isclose(gl.sum(), np.asarray(loads).sum())

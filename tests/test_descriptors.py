@@ -1,0 +1,78 @@
+"""Unit + property tests for the segment-descriptor layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.descriptors import (as_byte_descriptors, build_slot_table,
+                                    drop_neg, gather_rows, group_counts,
+                                    positions_within_groups, scatter_rows)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=-1, max_value=7), min_size=1, max_size=64))
+def test_positions_within_groups_property(keys):
+    keys = jnp.array(keys, jnp.int32)
+    pos = np.asarray(positions_within_groups(keys))
+    seen = {}
+    for i, k in enumerate(np.asarray(keys)):
+        expect = seen.get(int(k), 0)
+        assert pos[i] == expect, (i, k, pos)
+        seen[int(k)] = expect + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=-1, max_value=5), min_size=1, max_size=48),
+       st.integers(min_value=1, max_value=6))
+def test_slot_table_invariants(keys, capacity):
+    keys = jnp.array(keys, jnp.int32)
+    g = 6
+    t = build_slot_table(keys, g, capacity)
+    slot = np.asarray(t.slot)
+    # 1. uniqueness of assigned slots
+    assigned = slot[slot >= 0]
+    assert len(set(assigned.tolist())) == len(assigned)
+    # 2. slot in its key's group range
+    for i, k in enumerate(np.asarray(keys)):
+        if slot[i] >= 0:
+            assert slot[i] // capacity == k
+    # 3. counts match histogram
+    counts = np.asarray(t.counts)
+    for gid in range(g):
+        assert counts[gid] == int((np.asarray(keys) == gid).sum())
+    # 4. overflow dropped: per group, at most `capacity` slots
+    for gid in range(g):
+        n_assigned = int(((slot >= 0) & (slot // capacity == gid)).sum())
+        assert n_assigned == min(capacity, counts[gid])
+
+
+def test_scatter_gather_roundtrip_with_invalid():
+    rows = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    slot = jnp.array([2, -1, 0, 5], jnp.int32)
+    buf = scatter_rows(rows, slot, 6)
+    # -1 must be DROPPED, not wrap to the last row
+    assert float(buf[5].sum()) == float(rows[3].sum())
+    assert float(buf[1].sum()) == 0.0  # untouched
+    back = gather_rows(buf, slot)
+    assert np.allclose(np.asarray(back[0]), np.asarray(rows[0]))
+    assert np.allclose(np.asarray(back[1]), 0.0)  # -1 -> fill
+
+
+def test_drop_neg_is_out_of_bounds():
+    idx = jnp.array([-1, 0, 3], jnp.int32)
+    out = np.asarray(drop_neg(idx, 4))
+    assert out[0] >= 4 and out[1] == 0 and out[2] == 3
+
+
+def test_byte_descriptor_view():
+    slot = jnp.array([[0, -1], [3, 1]], jnp.int32)
+    addr, size = as_byte_descriptors(slot, 1024)
+    assert np.asarray(addr).tolist() == [[0, -1], [3072, 1024]]
+    assert np.asarray(size).tolist() == [[1024, 0], [1024, 1024]]
+
+
+def test_group_counts_ignores_negative():
+    counts = group_counts(jnp.array([0, 0, -1, 2], jnp.int32), 3)
+    assert np.asarray(counts).tolist() == [2, 0, 1]

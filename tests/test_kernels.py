@@ -1,0 +1,74 @@
+"""Per-kernel Pallas (interpret mode) vs pure-jnp oracle, shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.segment_gather import segment_gather
+from repro.kernels.segment_scatter_add import segment_scatter_add
+
+
+@pytest.mark.parametrize("t,r,d,bd,dtype", [
+    (37, 16, 256, 128, jnp.float32),
+    (64, 64, 512, 512, jnp.bfloat16),
+    (8, 128, 128, 64, jnp.float32),
+    (5, 3, 256, 256, jnp.bfloat16),
+])
+def test_segment_gather_sweep(t, r, d, bd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    src = jax.random.normal(ks[0], (t, d)).astype(dtype)
+    idx = jax.random.randint(ks[1], (r,), -1, t).astype(jnp.int32)
+    out = segment_gather(src, idx, block_d=bd, interpret=True)
+    expect = ref.segment_gather_ref(src, idx)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=0)
+
+
+@pytest.mark.parametrize("r,out_rows,d,bd,dtype", [
+    (8, 5, 256, 128, jnp.float32),
+    (32, 8, 512, 512, jnp.float32),
+    (16, 4, 128, 64, jnp.bfloat16),
+])
+def test_segment_scatter_add_sweep(r, out_rows, d, bd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    src = jax.random.normal(ks[0], (r, d)).astype(dtype)
+    dst = jax.random.randint(ks[1], (r,), -1, out_rows).astype(jnp.int32)
+    gates = jax.random.uniform(ks[2], (r,))
+    out = segment_scatter_add(src, dst, gates, out_rows, block_d=bd,
+                              interpret=True)
+    expect = ref.segment_scatter_add_ref(src, dst, gates, out_rows)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("g,c,d,f,dtype", [
+    (4, 256, 128, 256, jnp.bfloat16),
+    (2, 128, 256, 128, jnp.float32),
+    (8, 128, 128, 128, jnp.bfloat16),
+])
+def test_grouped_matmul_sweep(g, c, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = (jax.random.normal(ks[0], (g, c, d)) * 0.3).astype(dtype)
+    w = (jax.random.normal(ks[1], (g, d, f)) * 0.1).astype(dtype)
+    counts = jax.random.randint(ks[2], (g,), 0, c + 1).astype(jnp.int32)
+    out = grouped_matmul(x, w, counts, interpret=True)
+    expect = ref.grouped_matmul_ref(x, w, counts)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_gather_scatter_roundtrip_is_identity_when_bijective():
+    d = 128
+    src = jax.random.normal(jax.random.PRNGKey(3), (16, d))
+    perm = jax.random.permutation(jax.random.PRNGKey(4), 16).astype(jnp.int32)
+    gathered = segment_gather(src, perm, interpret=True)
+    inv = jnp.zeros(16, jnp.int32).at[perm].set(jnp.arange(16, dtype=jnp.int32))
+    back = segment_gather(gathered, inv, interpret=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(src))

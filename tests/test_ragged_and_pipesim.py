@@ -1,0 +1,73 @@
+"""Ragged-engine descriptor construction (structural) + pipeline simulator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dcomm import build_ragged_descriptors
+from repro.core.planner import build_flat_plan
+from repro.core.pipesim import PipeParams, best_slice, simulate
+from repro.core.routing import ExpertPlacement
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 5000), st.integers(1, 4))
+def test_ragged_descriptors_structural(seed, k):
+    """Compact wire buffer preserves slot order; offsets/sizes consistent."""
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    t = 24
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.randint(key, (t, k), 0, 8)
+    gates = jnp.ones((t, k)) / k
+    cap = 16
+    plan = build_flat_plan(A, gates, placement, cap)
+    compact, offs, sizes = build_ragged_descriptors(plan, placement, cap)
+    compact, offs, sizes = map(np.asarray, (compact, offs, sizes))
+    slot_src = np.asarray(plan.src_of_slot)
+
+    occupied = slot_src[slot_src >= 0]
+    n_occ = len(occupied)
+    # 1. compact prefix == occupied rows in slot order
+    np.testing.assert_array_equal(compact[:n_occ], occupied)
+    assert (compact[n_occ:] == -1).all()
+    # 2. sizes sum to occupied rows; offsets are their prefix sums
+    assert sizes.sum() == n_occ
+    np.testing.assert_array_equal(offs, np.concatenate([[0], np.cumsum(sizes)[:-1]]))
+    # 3. per-lane segments contain only rows destined for that lane
+    e_local, c = placement.experts_per_lane, cap
+    for lane in range(placement.ep):
+        lo, hi = offs[lane], offs[lane] + sizes[lane]
+        lane_slots = slot_src[lane * e_local * c:(lane + 1) * e_local * c]
+        np.testing.assert_array_equal(compact[lo:hi],
+                                      lane_slots[lane_slots >= 0])
+
+
+def test_pipesim_wire_bound_and_overhead():
+    p = PipeParams(payload_bytes=32e6, stage_bw=3.3e12, wire_bw=50e9)
+    # large-enough slices: staging fully hidden -> efficiency ~1
+    good = simulate(p, 1 << 22)
+    assert good["efficiency"] > 0.9
+    assert good["total_s"] >= good["wire_bound_s"]
+    # tiny slices: per-slice overhead dominates
+    bad = simulate(p, 4096)
+    assert bad["efficiency"] < 0.5
+    # pipelining beats the unpipelined sum whenever there is >1 slice
+    assert good["speedup"] > 1.0
+
+
+def test_pipesim_knee_monotone_in_overhead():
+    """Higher per-slice overhead pushes the optimal slice size up."""
+    small = best_slice(PipeParams(32e6, per_slice_overhead_s=5e-7))
+    big = best_slice(PipeParams(32e6, per_slice_overhead_s=2e-5))
+    assert big["slice_bytes"] >= small["slice_bytes"]
+
+
+def test_pipesim_slow_stage_still_bounded():
+    """Even when staging is slower than the wire, total <= stage + wire sums
+    and >= max of the two resource totals."""
+    p = PipeParams(payload_bytes=8e6, stage_bw=10e9, wire_bw=50e9)
+    r = simulate(p, 1 << 20)
+    stage_total = r["n_slices"] * ((1 << 20) / 10e9 + p.per_slice_overhead_s)
+    assert r["total_s"] <= r["unpipelined_s"] + 1e-9
+    assert r["total_s"] >= stage_total - 1e-9
