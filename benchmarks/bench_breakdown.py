@@ -18,6 +18,8 @@ full = jax.jit(engine_fn("disagg", T))
 t_full = timeit(full, x, A, g, w1, w3, w2)
 fused = jax.jit(engine_fn("fused_flat", T))
 t_fused = timeit(fused, x, A, g, w1, w3, w2)
+piped = jax.jit(engine_fn("fused_pipe", T))
+t_pipe = timeit(piped, x, A, g, w1, w3, w2)
 
 # rearrangement passes in isolation: sort-by-lane + pack (the pre-a2a
 # permutation of the disagg path), doubled for the receive side
@@ -42,6 +44,7 @@ t_rearr = timeit(jax.jit(rf), x, A) * 2        # send + receive side
 print(json.dumps({
     "disagg_total": t_full,
     "fused_total": t_fused,
+    "fused_pipe_total": t_pipe,
     "rearrange_passes": t_rearr,
     "rearr_ratio": t_rearr / t_full,
     "payload_mb": T * K * D * 4 / 1e6,
@@ -54,6 +57,7 @@ def run() -> list[tuple[str, float, str]]:
     return [
         ("breakdown/disagg_total", r["disagg_total"] * 1e6, ""),
         ("breakdown/fused_total", r["fused_total"] * 1e6, ""),
+        ("breakdown/fused_pipe_total", r["fused_pipe_total"] * 1e6, ""),
         ("breakdown/rearrange_passes", r["rearrange_passes"] * 1e6, ""),
         ("breakdown/rearr_ratio_of_total", r["rearr_ratio"] * 100, "%"),
         ("breakdown/payload_mb", r["payload_mb"], "MB"),

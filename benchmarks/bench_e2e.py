@@ -12,6 +12,7 @@ from benchmarks.common import REPO, run_sub
 CODE = """
 import json, time
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.configs.base import ArchConfig, MoESpec
 from repro.models import zoo
@@ -19,8 +20,7 @@ from repro.models.lm import make_context
 from repro.launch.steps import make_train_step
 from repro.optim import adamw
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 deepseek_like = ArchConfig(
     name="deepseek-v3-like", family="moe", n_layers=4, d_model=128,

@@ -35,7 +35,7 @@ import json, time
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from repro.core.routing import ExpertPlacement
 from repro.core.dcomm import DcommConfig
 from repro.core import fusco, planner, dcomm
@@ -69,21 +69,21 @@ def make_traffic(pattern, T, seed=0):
     gates = r.dirichlet(np.ones(K), T).astype(np.float32)
     return jnp.array(A, jnp.int32), jnp.array(gates)
 
-mesh = jax.make_mesh((EP,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((EP,), ("model",))
 placement = ExpertPlacement(n_experts=E, ep=EP, node_size=NODE)
 
-def engine_fn(engine, T, balancer=True, cap=2.0, with_ffn=False):
+def engine_fn(engine, T, balancer=True, cap=2.0, with_ffn=False, **ekw):
     # with_ffn=False == the paper's communication benchmark (S5.2): the
-    # shuffle pipeline only, expert compute excluded.
+    # shuffle pipeline only, expert compute excluded.  with_ffn=True routes
+    # through fusco.shuffle_ffn, so fused_pipe runs its fully fused sliced
+    # pipeline (FFN overlapping the wire) rather than split dispatch/combine.
     cfg = DcommConfig(engine=engine, ep_axis="model", node_size=NODE,
-                      capacity_factor=cap, use_balancer=balancer)
+                      capacity_factor=cap, use_balancer=balancer, **ekw)
     def fn(x, A, g, w1, w3, w2):
-        res = fusco.dispatch(x, A, g, placement, cfg)
         if with_ffn:
-            out = fusco.swiglu_experts(res.expert_rows, w1, w3, w2)
-        else:
-            out = res.expert_rows
-        return fusco.combine(out, res, placement, cfg, g)
+            return fusco.shuffle_ffn(x, A, g, w1, w3, w2, placement, cfg)
+        res = fusco.dispatch(x, A, g, placement, cfg)
+        return fusco.combine(res.expert_rows, res, placement, cfg, g)
     return shard_map(fn, mesh=mesh,
                      in_specs=(P("model"), P("model"), P("model"),
                                P("model"), P("model"), P("model")),

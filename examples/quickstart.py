@@ -1,8 +1,9 @@
 """Quickstart: FUSCO's fused MoE shuffle in ~60 lines.
 
 Builds an 8-lane expert-parallel mesh (forced host devices), routes tokens
-with a real top-k router, and runs all three CPU engines against the dense
-oracle — demonstrating the drop-in engine swap (DcommConfig only).
+with a real top-k router, and runs the four CPU engines against the dense
+oracle (fused_pipe streams the shuffle as pipesim-chosen capacity slices) —
+demonstrating the drop-in engine swap (DcommConfig only).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,7 +13,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import DcommConfig, ExpertPlacement, dense_moe_reference, moe_shuffle_ffn
@@ -21,8 +22,7 @@ from repro.core import DcommConfig, ExpertPlacement, dense_moe_reference, moe_sh
 def main():
     EP, E, K, T, D, F = 8, 32, 4, 128, 64, 96
     placement = ExpertPlacement(n_experts=E, ep=EP, node_size=4)
-    mesh = jax.make_mesh((EP,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((EP,), ("model",))
 
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     x = jax.random.normal(ks[0], (EP * T, D))          # tokens, EP-sharded
@@ -33,7 +33,7 @@ def main():
 
     oracle = dense_moe_reference(x, w_router, w1, w3, w2, K)
 
-    for engine in ["fused_flat", "fused_hier", "disagg"]:
+    for engine in ["fused_flat", "fused_pipe", "fused_hier", "disagg"]:
         cfg = DcommConfig(engine=engine, ep_axis="model", node_size=4,
                           capacity_factor=4.0)
 

@@ -5,10 +5,12 @@ Public surface:
   descriptors  — segment-descriptor slot tables (fixed-width token adaptation)
   planner      — two-level communication plans (node-level + expert-level)
   balancer     — Online Load Balancer (paper Algorithm 1)
-  dcomm        — the Data-Fused Communication Engine (4 wire engines)
+  dcomm        — the Data-Fused Communication Engine (5 wire engines)
   fusco        — drop-in MoE shuffle+FFN API and the dense oracle
+  pipesim      — discrete-event slice-pipeline model (feeds fused_pipe)
 """
 
 from repro.core.dcomm import DcommConfig  # noqa: F401
 from repro.core.routing import ExpertPlacement  # noqa: F401
-from repro.core.fusco import moe_shuffle_ffn, dense_moe_reference  # noqa: F401
+from repro.core.fusco import (moe_shuffle_ffn, shuffle_ffn,  # noqa: F401
+                              dense_moe_reference)

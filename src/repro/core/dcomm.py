@@ -1,34 +1,48 @@
 """dComm — the Data-Fused Communication Engine (paper §3.2), TPU-native.
 
-Four interchangeable wire engines, all driven by the same planner descriptors:
+Five interchangeable wire engines, all driven by the same planner descriptors:
 
-``fused_flat``
-    Single-level fused shuffle.  ONE descriptor-driven gather stages tokens
-    straight from their original layout into the communication buffer, laid
-    out in (destination lane × local-expert × capacity) sub-slots so the tiled
-    ``all_to_all`` lands every token **already expert-grouped** on the
-    receiver — the expert FFN consumes the landed buffer in place, and the
-    combine path scatter-adds straight back into the original token layout.
-    Zero intermediate permutation passes (the paper's dComm property).
-
-``fused_hier``
-    Two-level plan on top of the same fusion: node-level forwarding with
-    dedup (one copy per token per destination node, forwarder lane picked by
-    the Online Load Balancer) + expert-level distribution built on the
-    forwarder from piggybacked metadata, including intra-node expansion.
-    Combine pre-reduces per-node partials on the forwarder, so the slow tier
-    carries deduplicated bytes in *both* directions.
-
-``disagg``
-    The disaggregated baseline the paper profiles (§2.3): sort-by-destination
-    pass → all-to-all → sort-by-expert pass → FFN → inverse sequence.  Each
-    sort is a materialised permutation, exactly like the NCCL-based pipeline.
-
-``ragged``
-    The TPU production path: ``jax.lax.ragged_all_to_all`` whose offset/size
-    operands *are* sender/receiver segment descriptors (no capacity padding).
-    XLA:CPU cannot compile ragged-all-to-all, so this engine is exercised on
-    real TPUs only; its descriptor construction is unit-tested on CPU.
+============  =========  =========  ==========  =====================================
+engine        levels     padding    pipelined   notes
+============  =========  =========  ==========  =====================================
+fused_flat    1          capacity   no          ONE descriptor-driven gather stages
+                                                tokens straight into (dest lane ×
+                                                local-expert × capacity) sub-slots;
+                                                the tiled ``all_to_all`` lands every
+                                                token already expert-grouped, the FFN
+                                                consumes in place, combine scatter-
+                                                adds straight home.  Zero intermediate
+                                                permutation passes (the dComm
+                                                property).
+fused_pipe    1          capacity   **yes**     Same flat plan, but the staging buffer
+                                                is split into S slices along the
+                                                capacity axis and streamed: slice i's
+                                                grouped FFN + combine overlap slice
+                                                i+1's gather + all_to_all (double-
+                                                buffered ``lax.scan`` carry — the
+                                                paper's producer/consumer ring,
+                                                Fig. 5).  S comes from
+                                                ``pipesim.plan_slices`` or the
+                                                ``pipe_slices`` knob.
+fused_hier    2          capacity   no          Node-level forwarding with dedup (one
+                                                copy per token per destination node,
+                                                forwarder lane picked by the Online
+                                                Load Balancer) + expert-level
+                                                distribution from piggybacked
+                                                metadata; combine pre-reduces per-node
+                                                partials on the forwarder, so the slow
+                                                tier carries deduplicated bytes both
+                                                directions.
+disagg        1          capacity   no          The disaggregated baseline (§2.3):
+                                                sort-by-destination pass → all-to-all
+                                                → sort-by-expert pass → FFN → inverse,
+                                                each sort a materialised permutation.
+ragged        1          none       no          ``jax.lax.ragged_all_to_all`` whose
+                                                offset/size operands ARE the segment
+                                                descriptors.  TPU-only (XLA:CPU can't
+                                                compile it); descriptor construction
+                                                is unit-tested on CPU.
+============  =========  =========  ==========  =====================================
 
 All entry points run **inside shard_map** over the expert-parallel axis/axes.
 """
@@ -36,11 +50,13 @@ All entry points run **inside shard_map** over the expert-parallel axis/axes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size, ragged_all_to_all
+from repro.core import pipesim
 from repro.core import planner as planner_lib
 from repro.core.descriptors import drop_neg, gather_rows
 from repro.core.routing import ExpertPlacement
@@ -51,11 +67,17 @@ I32 = jnp.int32
 @dataclasses.dataclass(frozen=True)
 class DcommConfig:
     """Static configuration of the shuffle engine."""
-    engine: str = "fused_hier"            # fused_flat | fused_hier | disagg | ragged
+    engine: str = "fused_hier"            # fused_flat | fused_pipe | fused_hier | disagg | ragged
     ep_axis: Any = "model"                # axis name, or (pod_axis, model_axis)
     node_size: int = 4                    # lanes per (virtual) node; multi-pod: =model size
     capacity_factor: float = 2.0
     use_balancer: bool = True             # Online Load Balancer on/off (§5.4)
+    # fused_pipe slice knobs: 0 slices = auto via pipesim.plan_slices at the
+    # hardware point below (defaults: TPU v5e HBM staging / ICI wire).
+    pipe_slices: int = 0
+    pipe_stage_bw: float = 819e9
+    pipe_wire_bw: float = 50e9
+    pipe_overhead_s: float = 2e-6
 
     @property
     def model_axis(self) -> str:
@@ -75,7 +97,7 @@ def _lane_index(cfg: DcommConfig, placement: ExpertPlacement) -> jax.Array:
     m = jax.lax.axis_index(cfg.model_axis)
     if cfg.pod_axis is not None:
         p = jax.lax.axis_index(cfg.pod_axis)
-        return p * (placement.ep // jax.lax.axis_size(cfg.pod_axis)) + m
+        return p * (placement.ep // axis_size(cfg.pod_axis)) + m
     return m
 
 
@@ -92,6 +114,28 @@ class DispatchResult(NamedTuple):
     state: Any                  # engine-private
 
 
+def _flat_exchange(buf: jax.Array, cfg: DcommConfig, ep: int,
+                   reverse: bool = False) -> jax.Array:
+    """Tiled exchange of a lane-major buffer over the EP axis/axes.
+
+    ``buf`` is (EP, rows, ...); the leading axis is the destination lane on
+    dispatch and the origin lane on combine (``reverse=True`` runs the
+    two-level multi-pod exchange in the opposite order so it inverts the
+    forward one).
+    """
+    if cfg.pod_axis is None:
+        return jax.lax.all_to_all(buf, cfg.model_axis, 0, 0, tiled=True)
+    npod = axis_size(cfg.pod_axis)
+    buf = buf.reshape((npod, ep // npod) + buf.shape[1:])
+    if reverse:
+        buf = jax.lax.all_to_all(buf, cfg.pod_axis, 0, 0, tiled=True)
+        buf = jax.lax.all_to_all(buf, cfg.model_axis, 1, 1, tiled=True)
+    else:
+        buf = jax.lax.all_to_all(buf, cfg.model_axis, 1, 1, tiled=True)
+        buf = jax.lax.all_to_all(buf, cfg.pod_axis, 0, 0, tiled=True)
+    return buf.reshape((ep,) + buf.shape[2:])
+
+
 # ======================================================================
 # fused_flat
 # ======================================================================
@@ -106,15 +150,8 @@ def flat_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
 
     # ONE fused gather: original layout -> comm buffer (EP, E_local*C, d)
     buf = gather_rows(x, plan.src_of_slot)                   # (EP*E_local*C, d)
-    buf = buf.reshape(placement.ep, e_local * cap, d)
-    if cfg.pod_axis is not None:
-        npod = jax.lax.axis_size(cfg.pod_axis)
-        buf = buf.reshape(npod, placement.ep // npod, e_local * cap, d)
-        buf = jax.lax.all_to_all(buf, cfg.model_axis, 1, 1, tiled=True)
-        buf = jax.lax.all_to_all(buf, cfg.pod_axis, 0, 0, tiled=True)
-        buf = buf.reshape(placement.ep, e_local * cap, d)
-    else:
-        buf = jax.lax.all_to_all(buf, cfg.model_axis, 0, 0, tiled=True)
+    buf = _flat_exchange(buf.reshape(placement.ep, e_local * cap, d), cfg,
+                         placement.ep)
     # landed layout: (source lane, E_local, C, d) — expert-grouped already.
     expert_rows = buf.reshape(placement.ep, e_local, cap, d)
     return DispatchResult(expert_rows, None, (plan, t, d, cap))
@@ -124,20 +161,141 @@ def flat_combine(expert_out: jax.Array, res: DispatchResult,
                  placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
     plan, t, d, cap = res.state
     e_local = placement.experts_per_lane
-    buf = expert_out.reshape(placement.ep, e_local * cap, d)
-    if cfg.pod_axis is not None:
-        npod = jax.lax.axis_size(cfg.pod_axis)
-        buf = buf.reshape(npod, placement.ep // npod, e_local * cap, d)
-        buf = jax.lax.all_to_all(buf, cfg.pod_axis, 0, 0, tiled=True)
-        buf = jax.lax.all_to_all(buf, cfg.model_axis, 1, 1, tiled=True)
-        buf = buf.reshape(placement.ep * e_local * cap, d)
-    else:
-        buf = jax.lax.all_to_all(buf, cfg.model_axis, 0, 0, tiled=True)
-        buf = buf.reshape(placement.ep * e_local * cap, d)
+    buf = _flat_exchange(expert_out.reshape(placement.ep, e_local * cap, d),
+                         cfg, placement.ep, reverse=True)
+    buf = buf.reshape(placement.ep * e_local * cap, d)
     # fused weighted scatter-add straight into the original token layout
     w = plan.gate_of_slot[:, None].astype(buf.dtype)
     y = jnp.zeros((t, d), buf.dtype).at[drop_neg(plan.src_of_slot, t)].add(
         buf * w, mode="drop")
+    return y
+
+
+# ======================================================================
+# fused_pipe — the paper's pipelined engine (Fig. 5) on the flat plan
+# ======================================================================
+
+def _pipe_slice_plan(x: jax.Array, A: jax.Array, gates: jax.Array,
+                     placement: ExpertPlacement, cfg: DcommConfig):
+    """Build the flat plan with capacity rounded so it splits into S slices.
+
+    S is ``cfg.pipe_slices`` when set, else the pipesim knee for the staging
+    buffer's byte volume at the config's hardware point, clamped so every
+    slice keeps at least one row per (lane, expert) sub-slot.
+    """
+    t, d = x.shape
+    k = A.shape[1]
+    e_local = placement.experts_per_lane
+    cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
+    if cfg.pipe_slices > 0:
+        s = cfg.pipe_slices
+    else:
+        payload = float(placement.ep * e_local * cap * d * x.dtype.itemsize)
+        s = pipesim.plan_slices(
+            pipesim.PipeParams(payload_bytes=payload,
+                               stage_bw=cfg.pipe_stage_bw,
+                               wire_bw=cfg.pipe_wire_bw,
+                               per_slice_overhead_s=cfg.pipe_overhead_s),
+        )["n_slices"]
+    s = max(1, min(int(s), cap))
+    cap = int(-(-cap // s)) * s                       # round up to S slices
+    plan = planner_lib.build_flat_plan(A, gates, placement, cap)
+    sliced = planner_lib.slice_flat_plan(plan, placement, cap, s)
+    return plan, sliced, cap, s
+
+
+def _pipe_comm(x: jax.Array, src_slice: jax.Array, placement: ExpertPlacement,
+               cfg: DcommConfig) -> jax.Array:
+    """Stage + wire one slice: descriptor gather → tiled exchange.
+
+    ``src_slice`` is (EP, E_local, Cs); returns the landed (EP(source lane),
+    E_local, Cs, d) sub-buffer — the same layout as ``fused_flat``, one
+    capacity stripe at a time.
+    """
+    ep, d = placement.ep, x.shape[1]
+    _, e_local, cs = src_slice.shape
+    buf = gather_rows(x, src_slice.reshape(-1))
+    buf = _flat_exchange(buf.reshape(ep, e_local * cs, d), cfg, ep)
+    return buf.reshape(ep, e_local, cs, d)
+
+
+def _pipe_return(y: jax.Array, out_slice: jax.Array, src_slice: jax.Array,
+                 gate_slice: jax.Array, t: int, placement: ExpertPlacement,
+                 cfg: DcommConfig) -> jax.Array:
+    """Return one slice: reverse exchange → weighted scatter-add into ``y``."""
+    ep = placement.ep
+    e_local, cs, d = out_slice.shape[1:]
+    buf = _flat_exchange(out_slice.reshape(ep, e_local * cs, d), cfg, ep,
+                         reverse=True)
+    buf = buf.reshape(ep * e_local * cs, d)
+    w = gate_slice.reshape(-1, 1).astype(buf.dtype)
+    return y.at[drop_neg(src_slice.reshape(-1), t)].add(buf * w, mode="drop")
+
+
+def pipe_shuffle_ffn(x: jax.Array, A: jax.Array, gates: jax.Array,
+                     ffn: Callable[[jax.Array], jax.Array],
+                     placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    """The fully fused pipelined path: slice i's FFN + combine overlap slice
+    i+1's gather + all_to_all.
+
+    The double-buffered carry holds (accumulated output, landed slice i);
+    each scan step first *issues* slice i+1's communication, then consumes
+    slice i — XLA's async collectives (TPU) overlap the in-flight exchange
+    with the grouped FFN, exactly the producer/consumer ring of Fig. 5.
+    ``ffn`` maps a landed (EP, E_local, Cs, d) sub-buffer to expert outputs of
+    the same shape.
+    """
+    t, d = x.shape
+    _, sliced, _, s = _pipe_slice_plan(x, A, gates, placement, cfg)
+
+    def consume(y, landed, src_slice, gate_slice):
+        return _pipe_return(y, ffn(landed), src_slice, gate_slice, t,
+                            placement, cfg)
+
+    y = jnp.zeros((t, d), x.dtype)
+    landed = _pipe_comm(x, sliced.src[0], placement, cfg)    # prologue: slice 0
+    if s > 1:
+        def body(carry, xs):
+            y, landed = carry
+            src_next, src_cur, gate_cur = xs
+            landed_next = _pipe_comm(x, src_next, placement, cfg)
+            y = consume(y, landed, src_cur, gate_cur)        # overlaps the wire
+            return (y, landed_next), None
+        (y, landed), _ = jax.lax.scan(
+            body, (y, landed),
+            (sliced.src[1:], sliced.src[:-1], sliced.gate[:-1]))
+    return consume(y, landed, sliced.src[-1], sliced.gate[-1])
+
+
+def pipe_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
+                  placement: ExpertPlacement, cfg: DcommConfig) -> DispatchResult:
+    """Split-phase API: pipelined comm only, landed buffer identical to
+    ``fused_flat`` (the FFN-overlapped path is :func:`pipe_shuffle_ffn`)."""
+    t, d = x.shape
+    e_local = placement.experts_per_lane
+    _, sliced, cap, s = _pipe_slice_plan(x, A, gates, placement, cfg)
+    landed = jax.lax.map(
+        lambda src: _pipe_comm(x, src, placement, cfg), sliced.src)
+    # (S, EP, E_local, Cs, d) -> (EP, E_local, C, d): slices are capacity stripes
+    expert_rows = landed.transpose(1, 2, 0, 3, 4).reshape(
+        placement.ep, e_local, cap, d)
+    return DispatchResult(expert_rows, None, (sliced, t, d, cap, s))
+
+
+def pipe_combine(expert_out: jax.Array, res: DispatchResult,
+                 placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    sliced, t, d, cap, s = res.state
+    e_local = placement.experts_per_lane
+    cs = cap // s
+    out = expert_out.reshape(placement.ep, e_local, s, cs, d).transpose(
+        2, 0, 1, 3, 4)                                       # (S, EP, El, Cs, d)
+
+    def body(y, xs):
+        out_s, src_s, gate_s = xs
+        return _pipe_return(y, out_s, src_s, gate_s, t, placement, cfg), None
+
+    y, _ = jax.lax.scan(body, jnp.zeros((t, d), expert_out.dtype),
+                        (out, sliced.src, sliced.gate))
     return y
 
 
@@ -165,7 +323,7 @@ def hier_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     me = plan1.meta_expert                                   # (EP*C1, K)
     mg = plan1.meta_gate
     if cfg.pod_axis is not None:
-        npod = jax.lax.axis_size(cfg.pod_axis)
+        npod = axis_size(cfg.pod_axis)
 
         def _ex(v):
             v = v.reshape((npod, placement.ep // npod, c1) + v.shape[2:])
@@ -218,7 +376,7 @@ def hier_combine(expert_out: jax.Array, res: DispatchResult,
         drop_neg(plan2.src_of_slot, placement.ep * c1)].add(out, mode="drop")
     # return over the slow tier (deduplicated bytes both directions)
     if cfg.pod_axis is not None:
-        npod = jax.lax.axis_size(cfg.pod_axis)
+        npod = axis_size(cfg.pod_axis)
         part = part.reshape(npod, placement.ep // npod, c1, d)
         part = jax.lax.all_to_all(part, cfg.pod_axis, 0, 0, tiled=True)
         part = jax.lax.all_to_all(part, cfg.model_axis, 1, 1, tiled=True)
@@ -369,7 +527,7 @@ def ragged_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
         recv_offs.reshape(placement.ep, 1), cfg.model_axis, 0, 0,
         tiled=True).reshape(placement.ep)
     out_buf = jnp.zeros((placement.ep * e_local * cap, d), x.dtype)
-    landed = jax.lax.ragged_all_to_all(
+    landed = ragged_all_to_all(
         send_buf, out_buf, offs, send_sizes, out_offsets, recv_sizes,
         axis_name=cfg.model_axis)
     return DispatchResult(landed.reshape(1, 1, placement.ep * e_local * cap, d),

@@ -38,6 +38,8 @@ def dispatch(x, A, gates, placement: ExpertPlacement, cfg: DcommConfig,
              assignment=None) -> DispatchResult:
     if cfg.engine == "fused_flat":
         return dcomm.flat_dispatch(x, A, gates, placement, cfg)
+    if cfg.engine == "fused_pipe":
+        return dcomm.pipe_dispatch(x, A, gates, placement, cfg)
     if cfg.engine == "fused_hier":
         return dcomm.hier_dispatch(x, A, gates, placement, cfg,
                                    assignment if cfg.use_balancer else None)
@@ -52,11 +54,32 @@ def combine(expert_out, res: DispatchResult, placement, cfg: DcommConfig,
             gates=None) -> jax.Array:
     if cfg.engine == "fused_flat":
         return dcomm.flat_combine(expert_out, res, placement, cfg)
+    if cfg.engine == "fused_pipe":
+        return dcomm.pipe_combine(expert_out, res, placement, cfg)
     if cfg.engine == "fused_hier":
         return dcomm.hier_combine(expert_out, res, placement, cfg)
     if cfg.engine == "disagg":
         return dcomm.disagg_combine(expert_out, res, placement, cfg, gates)
     raise ValueError(f"unknown engine {cfg.engine!r}")
+
+
+def shuffle_ffn(x: jax.Array, A: jax.Array, gates: jax.Array, w1: jax.Array,
+                w3: jax.Array, w2: jax.Array, placement: ExpertPlacement,
+                cfg: DcommConfig,
+                assignment: jax.Array | None = None) -> jax.Array:
+    """Shuffle + grouped FFN + combine for pre-computed routing.
+
+    For ``fused_pipe`` this is the fully fused sliced pipeline — the grouped
+    FFN runs per capacity slice inside the communication loop; the split
+    dispatch()/combine() path remains available for comm-only benchmarking.
+    """
+    if cfg.engine == "fused_pipe":
+        return dcomm.pipe_shuffle_ffn(
+            x, A, gates, lambda rows: swiglu_experts(rows, w1, w3, w2),
+            placement, cfg)
+    res = dispatch(x, A, gates, placement, cfg, assignment)
+    out = swiglu_experts(res.expert_rows, w1, w3, w2)
+    return combine(out, res, placement, cfg, gates)
 
 
 def moe_shuffle_ffn(x: jax.Array, w_router: jax.Array, w1: jax.Array,
@@ -72,9 +95,8 @@ def moe_shuffle_ffn(x: jax.Array, w_router: jax.Array, w1: jax.Array,
     """
     logits = router_logits(x, w_router)
     A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
-    res = dispatch(x, A, gates.astype(x.dtype), placement, cfg, assignment)
-    out = swiglu_experts(res.expert_rows, w1, w3, w2)
-    return combine(out, res, placement, cfg, gates.astype(x.dtype))
+    return shuffle_ffn(x, A, gates.astype(x.dtype), w1, w3, w2, placement,
+                       cfg, assignment)
 
 
 def dense_moe_reference(x: jax.Array, w_router: jax.Array, w1_all: jax.Array,

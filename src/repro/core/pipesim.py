@@ -10,9 +10,10 @@ plays the NIC role):
   2. when wire time per slice ≥ staging time, staging is fully hidden —
      total ≈ setup + first-slice staging + wire time.
 
-This simulator is used by ``benchmarks/bench_pipeline.py`` to sweep slice
-sizes at the paper's hardware constants and pick the knee, and by tests to
-check the analytic bounds.
+This simulator backs two consumers: ``benchmarks/bench_pipeline.py`` sweeps
+slice sizes at the paper's hardware constants and reports the knee, and the
+real ``fused_pipe`` engine (``dcomm.pipe_*``) calls :func:`plan_slices` at
+trace time to choose how many capacity-axis slices to stream a shuffle as.
 """
 
 from __future__ import annotations
@@ -81,3 +82,22 @@ def best_slice(p: PipeParams, lo: float = 4096, hi: float = 2 ** 26) -> dict:
         s *= 2
     results = sweep(p, sizes)
     return max(results, key=lambda r: (round(r["efficiency"], 4), -r["slice_bytes"]))
+
+
+def plan_slices(p: PipeParams, payload_bytes: float | None = None,
+                max_slices: int | None = None) -> dict:
+    """Slice plan for a concrete payload: how many slices to stream it as.
+
+    Runs :func:`best_slice` at ``p``'s hardware point (overriding
+    ``payload_bytes`` when given) and converts the knee slice size into a
+    slice *count*, which is what a statically-shaped engine needs.  Returns
+    the ``best_slice`` result dict extended with ``n_slices``.
+    """
+    if payload_bytes is not None:
+        p = dataclasses.replace(p, payload_bytes=float(payload_bytes))
+    b = dict(best_slice(p))
+    n = max(1, int(-(-p.payload_bytes // b["slice_bytes"])))
+    if max_slices is not None:
+        n = min(n, max_slices)
+    b["n_slices"] = n
+    return b

@@ -39,6 +39,36 @@ class FlatPlan(NamedTuple):
     lane: jax.Array             # (T, K) destination lane (diagnostics / tests)
 
 
+class SlicedFlatPlan(NamedTuple):
+    """A flat plan re-indexed for the pipelined engine: the (lane ×
+    local-expert × capacity) descriptor table split into ``n_slices`` equal
+    chunks along the *capacity* axis, slice-major so the engine can stream
+    slice ``s`` while slice ``s-1`` is still in flight (paper Fig. 5)."""
+    src: jax.Array              # (S, EP, E_local, C/S) source token per slot
+    gate: jax.Array             # (S, EP, E_local, C/S) combine weight per slot
+    n_slices: int
+
+
+def slice_flat_plan(plan: FlatPlan, placement: ExpertPlacement, capacity: int,
+                    n_slices: int) -> SlicedFlatPlan:
+    """Capacity-axis slicing of a flat plan's descriptors.
+
+    Slot ``(lane, e, c)`` lands in slice ``c // (capacity / n_slices)``; within
+    a slice the layout stays (lane-major, expert-major, arrival-order), so
+    concatenating the slices back along the capacity axis reproduces the
+    monolithic plan exactly.  ``capacity`` must be a multiple of ``n_slices``
+    (the engine rounds it up when picking the slice count).
+    """
+    if capacity % n_slices != 0:
+        raise ValueError(f"capacity={capacity} not divisible by n_slices={n_slices}")
+    ep, e_local = placement.ep, placement.experts_per_lane
+    cs = capacity // n_slices
+    src = plan.src_of_slot.reshape(ep, e_local, n_slices, cs)
+    gate = plan.gate_of_slot.reshape(ep, e_local, n_slices, cs)
+    return SlicedFlatPlan(src.transpose(2, 0, 1, 3),
+                          gate.transpose(2, 0, 1, 3), n_slices)
+
+
 class HierPlan(NamedTuple):
     """Node-level forwarding plan (per shard, sender side)."""
     slots: SlotTable            # (T, n_nodes) -> row in (EP * C1) buffer; -1 if

@@ -209,7 +209,7 @@ def sharded_flash_attention(q, k, v, q_positions, k_positions, *, mesh,
     qk-norm and RoPE run INSIDE the shard so their f32 intermediates (and
     their cotangents) never materialise at full width.
     """
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     b, sq, hq, hd = q.shape

@@ -18,7 +18,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -427,7 +427,7 @@ def _moe_decode_block(x, moe_p, ctx: ModelContext):
         my = jax.lax.axis_index(ep_axes[-1])
         if len(ep_axes) == 2:
             my = my + jax.lax.axis_index(ep_axes[0]) * (
-                placement.ep // jax.lax.axis_size(ep_axes[0]))
+                placement.ep // axis_size(ep_axes[0]))
         # masked dense compute over this lane's experts
         h1 = jnp.einsum("td,edf->tef", xt, w1[0])
         h3 = jnp.einsum("td,edf->tef", xt, w3[0])

@@ -1,0 +1,82 @@
+"""Tiny deterministic fallback for ``hypothesis`` when it isn't installed.
+
+Test modules do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+Real hypothesis (CI installs it) explores the strategy space; this shim keeps
+the same test code *collectable and running* without it by substituting a
+small deterministic example set per strategy — boundary values plus a
+midpoint — and running the cartesian product (capped).  It covers only the
+strategy API this repo uses: integers, booleans, sampled_from, lists.
+"""
+
+from __future__ import annotations
+
+import itertools
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+def _integers(min_value=0, max_value=10):
+    mid = (min_value + max_value) // 2
+    return _Strategy(dict.fromkeys([min_value, mid, max_value]))
+
+
+def _booleans():
+    return _Strategy([False, True])
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    picks = [seq[0], seq[len(seq) // 2], seq[-1]]
+    out = []
+    for p in picks:                       # dedupe, order-preserving
+        if p not in out:
+            out.append(p)
+    return _Strategy(out)
+
+
+def _lists(elem: _Strategy, min_size=0, max_size=10):
+    ex = elem.examples
+    outs = []
+    if min_size == 0:
+        outs.append([])
+    outs.append(list(itertools.islice(itertools.cycle(ex),
+                                      max(min_size, min(max_size, 5)))))
+    outs.append(list(itertools.islice(itertools.cycle(reversed(ex)),
+                                      max_size)))
+    return _Strategy([o for o in outs if min_size <= len(o) <= max_size])
+
+
+st = SimpleNamespace(integers=_integers, booleans=_booleans,
+                     sampled_from=_sampled_from, lists=_lists)
+
+_MAX_CASES = 24
+
+
+def given(*strategies):
+    def deco(test):
+        # NB: no functools.wraps — pytest must see a zero-arg signature, not
+        # the strategy parameters (it would resolve them as fixtures).
+        def wrapper():
+            cases = itertools.islice(
+                itertools.product(*(s.examples for s in strategies)),
+                _MAX_CASES)
+            for case in cases:
+                test(*case)
+        wrapper.__name__ = test.__name__
+        wrapper.__doc__ = test.__doc__
+        return wrapper
+    return deco
+
+
+def settings(*_a, **_kw):
+    return lambda test: test

@@ -9,13 +9,18 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+TESTS = os.path.dirname(os.path.abspath(__file__))
 
 
 def run_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
-    """Run a python snippet in a subprocess with n forced host devices."""
+    """Run a python snippet in a subprocess with n forced host devices.
+
+    The child sees both ``src`` and ``tests`` on PYTHONPATH, so snippets can
+    import the conformance harness (``engine_harness``) directly.
+    """
     env = {**os.environ,
            "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
-           "PYTHONPATH": SRC}
+           "PYTHONPATH": os.pathsep.join([SRC, TESTS])}
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=timeout, env=env)
     if r.returncode != 0:

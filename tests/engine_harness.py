@@ -1,0 +1,118 @@
+"""Reusable dComm engine-conformance harness.
+
+A conformance *spec* (plain dict, JSON-serialisable) names a mesh topology,
+an expert placement, and a grid of (node_size × capacity_factor × balancer ×
+engine-kwargs) settings.  :func:`run_conformance` executes the grid INSIDE a
+forced-multi-device subprocess and checks every cell against
+``fusco.dense_moe_reference``: bit-for-bit (≤ ``tol`` max abs err) at ample
+capacity, finite under capacity pressure.  :func:`driver_code` wraps a spec
+into the snippet the ``multidevice`` fixture runs.
+
+Adding conformance for a new engine is one line in ``tests/test_engines.py``
+(its name in ``ENGINES``, plus any engine-private kwargs grid); replication,
+multi-pod hierarchy and the oracle comparison come for free.
+"""
+
+from __future__ import annotations
+
+import json
+
+OK_TOKEN = "CONFORMANCE_OK"
+
+
+def conformance_spec(engine: str, *, mesh=(("model", 8),), node_sizes=(2, 4),
+                     n_experts: int = 16, top_k: int = 4, t_per_lane: int = 32,
+                     d: int = 32, f: int = 48, caps_exact=(8.0,),
+                     caps_pressure=(0.5,), balancers=(True, False),
+                     engine_kwargs_grid=({},), tol: float = 1e-3,
+                     seed: int = 0) -> dict:
+    """Build a spec dict; defaults cover the standard single-pod 8-lane grid."""
+    return {
+        "engine": engine,
+        "mesh": [list(ax) for ax in mesh],
+        "node_sizes": list(node_sizes),
+        "n_experts": n_experts, "top_k": top_k,
+        "t_per_lane": t_per_lane, "d": d, "f": f,
+        "caps_exact": list(caps_exact),
+        "caps_pressure": list(caps_pressure),
+        "balancers": list(balancers),
+        "engine_kwargs_grid": [dict(kw) for kw in engine_kwargs_grid],
+        "tol": tol, "seed": seed,
+    }
+
+
+def driver_code(spec: dict) -> str:
+    """Snippet for conftest.run_devices: runs the spec in the subprocess."""
+    return ("import engine_harness\n"
+            f"engine_harness.run_conformance({json.dumps(spec)!r})\n")
+
+
+def run_conformance(spec) -> None:
+    """Execute a conformance spec against the dense oracle (subprocess side)."""
+    import itertools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+    from repro.core import fusco
+    from repro.core.dcomm import DcommConfig
+    from repro.core.routing import ExpertPlacement
+    from repro.layers.moe import lane_major_expert_weights
+
+    if isinstance(spec, str):
+        spec = json.loads(spec)
+
+    axes = [(str(name), int(size)) for name, size in spec["mesh"]]
+    mesh = make_mesh(tuple(s for _, s in axes), tuple(n for n, _ in axes))
+    ep = 1
+    for _, s in axes:
+        ep *= s
+    ep_axis = axes[0][0] if len(axes) == 1 else tuple(n for n, _ in axes)
+    ep_spec = P(axes[0][0]) if len(axes) == 1 else P(tuple(n for n, _ in axes))
+
+    e, k = spec["n_experts"], spec["top_k"]
+    t, d, f = spec["t_per_lane"], spec["d"], spec["f"]
+    ks = jax.random.split(jax.random.PRNGKey(spec["seed"]), 5)
+    x = jax.random.normal(ks[0], (ep * t, d))
+    wr = jax.random.normal(ks[1], (d, e)) * 0.5
+    w1 = jax.random.normal(ks[2], (e, d, f)) * 0.1
+    w3 = jax.random.normal(ks[3], (e, d, f)) * 0.1
+    w2 = jax.random.normal(ks[4], (e, f, d)) * 0.1
+    ref = fusco.dense_moe_reference(x, wr, w1, w3, w2, k)
+
+    def run(cfg, placement, w1l, w3l, w2l):
+        def fn(x, wr, a, b, c):
+            return fusco.moe_shuffle_ffn(x, wr, a, b, c, placement, cfg, k)
+        g = shard_map(fn, mesh=mesh,
+                      in_specs=(ep_spec, P(), ep_spec, ep_spec, ep_spec),
+                      out_specs=ep_spec, check_vma=False)
+        return jax.jit(g)(x, wr, w1l, w3l, w2l)
+
+    grid = itertools.product(spec["node_sizes"], spec["balancers"],
+                             spec["engine_kwargs_grid"])
+    n_cells = 0
+    for node_size, balancer, ekw in grid:
+        placement = ExpertPlacement(n_experts=e, ep=ep, node_size=node_size)
+        w1l = lane_major_expert_weights(w1, placement).reshape(-1, d, f)
+        w3l = lane_major_expert_weights(w3, placement).reshape(-1, d, f)
+        w2l = lane_major_expert_weights(w2, placement).reshape(-1, f, d)
+        for cap in spec["caps_exact"]:
+            cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
+                              node_size=node_size, capacity_factor=cap,
+                              use_balancer=balancer, **ekw)
+            y = run(cfg, placement, w1l, w3l, w2l)
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < spec["tol"], (
+                spec["engine"], node_size, balancer, ekw, cap, err)
+            n_cells += 1
+        for cap in spec["caps_pressure"]:
+            cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
+                              node_size=node_size, capacity_factor=cap,
+                              use_balancer=balancer, **ekw)
+            y = run(cfg, placement, w1l, w3l, w2l)
+            assert bool(jnp.all(jnp.isfinite(y))), (
+                spec["engine"], node_size, balancer, ekw, cap)
+            n_cells += 1
+    print(OK_TOKEN, spec["engine"], n_cells)

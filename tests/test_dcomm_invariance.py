@@ -1,0 +1,90 @@
+"""Dispatch/combine invariances — CPU, single process, no subprocess harness.
+
+``jax.vmap`` with an ``axis_name`` emulates the expert-parallel mesh axis
+(the collectives' batching rules are exact), so a multi-lane shuffle runs on
+one host device.  Two invariances pin the engines' routing algebra:
+
+  * **token permutation** — permuting tokens within each shard permutes the
+    combined outputs the same way (routing is per-token);
+  * **lane relabeling** — permuting which lane holds which token shard
+    permutes the output shards the same way (a token's experts are addressed
+    globally, independent of the lane it happens to sit on).
+
+``fused_hier`` is exercised with node_size == EP (vmap has no batching rule
+for grouped all_to_all); the grouped path is covered by the subprocess
+conformance harness.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusco
+from repro.core.dcomm import DcommConfig
+from repro.core.routing import ExpertPlacement
+from repro.layers.moe import lane_major_expert_weights
+
+EP, E, K, T, D, F = 4, 8, 2, 24, 16, 24
+
+CASES = [
+    ("fused_flat", 2, {}),
+    ("fused_pipe", 2, {}),                    # auto slice count
+    ("fused_pipe", 2, {"pipe_slices": 3}),    # capacity rounded up to 3 slices
+    ("fused_hier", EP, {}),
+    ("disagg", 2, {}),
+]
+IDS = [f"{e}-ns{n}" + (f"-s{kw['pipe_slices']}" if kw else "")
+       for e, n, kw in CASES]
+
+
+def _setup(node_size):
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=node_size)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (EP, T, D))
+    wr = jax.random.normal(ks[1], (D, E)) * 0.5
+    w1 = lane_major_expert_weights(jax.random.normal(ks[2], (E, D, F)) * 0.1,
+                                   placement)
+    w3 = lane_major_expert_weights(jax.random.normal(ks[3], (E, D, F)) * 0.1,
+                                   placement)
+    w2 = lane_major_expert_weights(jax.random.normal(ks[4], (E, F, D)) * 0.1,
+                                   placement)
+    return placement, x, wr, w1, w3, w2
+
+
+def _run(engine, node_size, ekw, placement, x, wr, w1, w3, w2):
+    cfg = DcommConfig(engine=engine, ep_axis="model", node_size=node_size,
+                      capacity_factor=8.0, **ekw)
+
+    def fn(x, w1, w3, w2):
+        return fusco.moe_shuffle_ffn(x, wr, w1, w3, w2, placement, cfg, K)
+
+    return jax.jit(jax.vmap(fn, axis_name="model"))(x, w1, w3, w2)
+
+
+@pytest.mark.parametrize("engine,node_size,ekw", CASES, ids=IDS)
+def test_token_permutation_equivariance(engine, node_size, ekw):
+    placement, x, wr, w1, w3, w2 = _setup(node_size)
+    y = _run(engine, node_size, ekw, placement, x, wr, w1, w3, w2)
+
+    rng = np.random.default_rng(1)
+    perms = jnp.array(np.stack([rng.permutation(T) for _ in range(EP)]))
+    x_p = jnp.take_along_axis(x, perms[:, :, None], axis=1)
+    y_p = _run(engine, node_size, ekw, placement, x_p, wr, w1, w3, w2)
+
+    np.testing.assert_allclose(
+        np.asarray(y_p),
+        np.asarray(jnp.take_along_axis(y, perms[:, :, None], axis=1)),
+        atol=1e-4)
+
+
+@pytest.mark.parametrize("engine,node_size,ekw", CASES, ids=IDS)
+def test_lane_relabel_equivariance(engine, node_size, ekw):
+    placement, x, wr, w1, w3, w2 = _setup(node_size)
+    y = _run(engine, node_size, ekw, placement, x, wr, w1, w3, w2)
+
+    lane_perm = jnp.array([2, 0, 3, 1])
+    y_p = _run(engine, node_size, ekw, placement, x[lane_perm], wr, w1, w3, w2)
+
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y[lane_perm]),
+                               atol=1e-4)

@@ -1,16 +1,17 @@
 """Property test: full FUSCO shuffle+FFN equals the dense oracle across
 random routings, placements, top-k and engines (4-device subprocess)."""
 
+import pytest
 
 PROP_CODE = """
 import jax, jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core import DcommConfig, ExpertPlacement, dense_moe_reference, moe_shuffle_ffn
 from repro.layers.moe import lane_major_expert_weights
 
-mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("model",))
 EP = 4
 rng = np.random.default_rng(0)
 cases = []
@@ -18,7 +19,7 @@ for seed in range(10):
     e = int(rng.choice([2, 4, 8]))
     ns = int(rng.choice([1, 2]))
     k = int(rng.integers(1, min(3, e) + 1))
-    eng = str(rng.choice(["fused_flat", "fused_hier", "disagg"]))
+    eng = str(rng.choice(["fused_flat", "fused_pipe", "fused_hier", "disagg"]))
     cases.append((seed, e, ns, k, eng))
 
 for seed, e, ns, k, eng in cases:
@@ -47,5 +48,6 @@ print("PROPERTY_OK")
 """
 
 
+@pytest.mark.slow
 def test_fusco_random_configs_match_oracle(multidevice):
     assert "PROPERTY_OK" in multidevice(PROP_CODE, 4, timeout=900)

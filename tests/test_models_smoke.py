@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.compat import make_mesh
+
 from repro.configs import ARCH_IDS, get_arch
 from repro.models import zoo
 from repro.models.lm import make_context
@@ -12,8 +14,7 @@ from repro.models.lm import make_context
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch_id", ARCH_IDS)

@@ -7,9 +7,10 @@ import pytest
 
 PIPE_CODE = """
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.parallel.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 n_stages, n_micro, mb, d = 4, 6, 2, 8
 ks = jax.random.split(jax.random.PRNGKey(0), 2)
 w = jax.random.normal(ks[0], (n_stages, d, d)) * 0.3
@@ -29,6 +30,7 @@ print("PIPE_OK")
 """
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential(multidevice):
     assert "PIPE_OK" in multidevice(PIPE_CODE, 4)
 

@@ -3,11 +3,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback so the suite still runs
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.dcomm import build_ragged_descriptors
 from repro.core.planner import build_flat_plan
-from repro.core.pipesim import PipeParams, best_slice, simulate
+from repro.core.pipesim import PipeParams, best_slice, plan_slices, simulate
 from repro.core.routing import ExpertPlacement
 
 
@@ -71,3 +74,65 @@ def test_pipesim_slow_stage_still_bounded():
     stage_total = r["n_slices"] * ((1 << 20) / 10e9 + p.per_slice_overhead_s)
     assert r["total_s"] <= r["unpipelined_s"] + 1e-9
     assert r["total_s"] >= stage_total - 1e-9
+
+
+# ---- the two analytic claims of the pipesim docstring, pinned exactly -------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(2, 40))
+def test_pipesim_overhead_bound_claim(payload_mb, overhead_us):
+    """Claim 1: too-small slices are overhead-bound — with one row per slice
+    the per-slice overhead alone already exceeds the wire bound, and halving
+    the slice size never improves the total."""
+    p = PipeParams(payload_bytes=payload_mb * 1e6, stage_bw=3.3e12,
+                   wire_bw=50e9, per_slice_overhead_s=overhead_us * 1e-6)
+    tiny = simulate(p, 1024)
+    assert tiny["n_slices"] * p.per_slice_overhead_s > tiny["wire_bound_s"]
+    assert tiny["efficiency"] < 0.5
+    # shrinking an already-tiny slice only adds overhead
+    tinier = simulate(p, 512)
+    assert tinier["total_s"] >= tiny["total_s"] - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_pipesim_staging_fully_hidden_claim(payload_mb, slice_mb):
+    """Claim 2: when wire time per slice >= staging time, staging hides
+    completely — total == (setup + staging of the FIRST slice) + n × wire,
+    exactly (the consumer never starves after the first slice)."""
+    p = PipeParams(payload_bytes=payload_mb * 1e6, stage_bw=3.3e12,
+                   wire_bw=50e9)
+    slice_bytes = slice_mb * 1e6
+    stage_t = slice_bytes / p.stage_bw + p.per_slice_overhead_s
+    wire_t = slice_bytes / p.wire_bw
+    assert wire_t >= stage_t, "hardware point must satisfy the claim's premise"
+    r = simulate(p, slice_bytes)
+    expect = stage_t + r["n_slices"] * wire_t
+    assert abs(r["total_s"] - expect) < 1e-12 * max(1.0, expect)
+
+
+def test_best_slice_is_feasible_knee():
+    p = PipeParams(payload_bytes=32e6, stage_bw=3.3e12, wire_bw=50e9)
+    b = best_slice(p)
+    # feasible: inside the sweep range, a positive whole number of slices
+    assert 4096 <= b["slice_bytes"] <= 2 ** 26
+    assert b["n_slices"] >= 1
+    assert 0.0 < b["efficiency"] <= 1.0 + 1e-12
+    # a knee: no power-of-two neighbour strictly beats it on efficiency
+    for s in (b["slice_bytes"] / 2, b["slice_bytes"] * 2):
+        if 4096 <= s <= 2 ** 26:
+            assert simulate(p, s)["efficiency"] <= b["efficiency"] + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 256))
+def test_plan_slices_covers_payload(payload_mb):
+    payload = payload_mb * 1e6
+    p = PipeParams(payload_bytes=1.0)          # payload overridden per call
+    plan = plan_slices(p, payload)
+    assert plan["n_slices"] >= 1
+    assert plan["n_slices"] * plan["slice_bytes"] >= payload
+    # one fewer slice would not cover the payload (count is tight)
+    assert (plan["n_slices"] - 1) * plan["slice_bytes"] < payload
+    capped = plan_slices(p, payload, max_slices=3)
+    assert 1 <= capped["n_slices"] <= 3

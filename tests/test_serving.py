@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
+
 from repro.configs import get_arch
 from repro.models import zoo
 from repro.models.lm import make_context
@@ -11,8 +13,7 @@ from repro.serving.engine import ServingEngine
 
 
 def test_serving_waves_complete():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_arch("qwen3-1.7b").reduced()
     ctx = make_context(cfg, mesh, multi_pod=False)
     bundle = zoo.build(cfg, ctx)

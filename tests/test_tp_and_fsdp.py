@@ -5,12 +5,12 @@ import pytest
 TP_EQUIV_CODE = """
 import dataclasses
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.models import zoo
 from repro.models.lm import make_context
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 for arch in ["qwen3-4b", "qwen3-moe-30b-a3b"]:
     cfg = get_arch(arch).reduced()
     ctx1 = make_context(cfg, mesh, multi_pod=False, capacity_factor=4.0)
@@ -34,12 +34,12 @@ print("TP_EQUIV_OK")
 FSDP_EQUIV_CODE = """
 import dataclasses
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.models import zoo
 from repro.models.lm import make_context
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_arch("mixtral-8x22b").reduced()
 ctx = make_context(cfg, mesh, multi_pod=False, capacity_factor=4.0)
 ctx1 = dataclasses.replace(ctx, fsdp_experts=True)
@@ -62,14 +62,14 @@ print("FSDP_EQUIV_OK")
 
 ACCUM_CODE = """
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.models import zoo
 from repro.models.lm import make_context
 from repro.launch.steps import make_train_step
 from repro.optim import adamw
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 cfg = get_arch("qwen3-1.7b").reduced()
 ctx = make_context(cfg, mesh, multi_pod=False)
 bundle = zoo.build(cfg, ctx)
@@ -88,14 +88,17 @@ print("ACCUM_OK", err)
 """
 
 
+@pytest.mark.slow
 def test_explicit_tp_matches_gspmd(multidevice):
     assert "TP_EQUIV_OK" in multidevice(TP_EQUIV_CODE, 8, timeout=900)
 
 
+@pytest.mark.slow
 def test_fsdp_experts_equivalent(multidevice):
     assert "FSDP_EQUIV_OK" in multidevice(FSDP_EQUIV_CODE, 8, timeout=900)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalent(multidevice):
     assert "ACCUM_OK" in multidevice(ACCUM_CODE, 4, timeout=900)
 
