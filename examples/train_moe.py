@@ -7,6 +7,12 @@ weights, fault-tolerant loop with async checkpoints, deterministic Zipf
 Run:  PYTHONPATH=src python examples/train_moe.py [--steps 300]
 (On this 1-core CPU container ~300 steps ≈ 10–20 min; use --steps 30 for a
 quick pass.)
+
+``--stream N`` trains the attention-free MoE-FFN stack instead, with blocks
+of N consecutive MoE layers fused into one cross-layer pipelined stream
+(fused_pipe engine: the combine of layer i overlaps the dispatch of layer
+i+1).  ``--stream 1`` is the same model with per-layer barriers — the pair
+is the end-to-end A/B for the stream path.
 """
 
 import os
@@ -29,33 +35,48 @@ MOE_100M = ArchConfig(
     n_kv_heads=4, d_ff=1024, vocab=16384, head_dim=48, qk_norm=True,
     moe=MoESpec(n_experts=32, top_k=2, d_ff_expert=512), source="example")
 
+# stream variant: same expert budget, attention-free MoE-FFN stack — the
+# shape the cross-layer pipelined stream targets (--stream N)
+MOE_FFN_100M = dataclasses.replace(
+    MOE_100M, name="moe-ffn-100m", family="moe_ffn", n_heads=0, n_kv_heads=0,
+    d_ff=0, qk_norm=False, head_dim=None)
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--stream", type=int, default=0,
+                    help="layers per cross-layer stream block (moe_ffn "
+                         "stack, fused_pipe engine); 0 = the attention MoE "
+                         "with fused_hier")
     args = ap.parse_args()
+    arch = MOE_FFN_100M if args.stream else MOE_100M
 
     # register the example config under a temporary name
     import repro.configs as cfgs
     import types
     mod = types.ModuleType("repro.configs.moe_100m")
-    mod.ARCH = MOE_100M
+    mod.ARCH = arch
     sys.modules["repro.configs.moe_100m"] = mod
     cfgs._MODULES["moe-100m"] = "moe_100m"
 
     from repro.launch.roofline import count_matmul_params
-    n = count_matmul_params(MOE_100M) + MOE_100M.vocab * MOE_100M.d_model \
-        + MOE_100M.n_layers * MOE_100M.moe.n_experts * 3 \
-        * MOE_100M.d_model * MOE_100M.moe.d_ff_expert
+    n = count_matmul_params(arch) + arch.vocab * arch.d_model \
+        + arch.n_layers * arch.moe.n_experts * 3 \
+        * arch.d_model * arch.moe.d_ff_expert
     print(f"model: ~{n/1e6:.0f}M params")
+    extra = []
+    if args.stream:
+        extra = ["--moe-stream", str(args.stream)]
     train_mod.main([
-        "--arch", "moe-100m", "--engine", "fused_hier",
+        "--arch", "moe-100m",
+        "--engine", "fused_pipe" if args.stream else "fused_hier",
         "--steps", str(args.steps), "--seq", str(args.seq),
         "--batch", str(args.batch), "--ckpt-dir", "/tmp/moe100m_ckpt",
         "--ckpt-every", "100", "--log-every", "10", "--lr", "1e-3",
-    ])
+    ] + extra)
 
 
 if __name__ == "__main__":

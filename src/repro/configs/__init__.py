@@ -15,9 +15,12 @@ _MODULES = {
     "qwen2-vl-7b": "qwen2_vl_7b",
     # paper benchmark setting (not part of the 10 assigned archs)
     "deepseek-v3-bench": "deepseek_v3_bench",
+    # cross-layer stream setting (not part of the 10 assigned archs)
+    "moe-ffn-stream": "moe_ffn_stream",
 }
 
-ARCH_IDS = tuple(k for k in _MODULES if k != "deepseek-v3-bench")
+ARCH_IDS = tuple(k for k in _MODULES
+                 if k not in ("deepseek-v3-bench", "moe-ffn-stream"))
 
 
 def get_arch(name: str):

@@ -33,7 +33,9 @@ class SsmSpec:
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    family: str                      # dense | moe | moe_ffn | ssm | hybrid | encdec | vlm
+                                     # (moe_ffn: attention-free MoE-FFN stack,
+                                     # streamable via ModelContext.moe_stream)
     n_layers: int
     d_model: int
     n_heads: int

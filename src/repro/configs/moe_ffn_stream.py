@@ -1,0 +1,26 @@
+"""Attention-free MoE-FFN stack — the cross-layer stream benchmark setting.
+
+Consecutive MoE layers with nothing between them are exactly the shape the
+cross-layer pipelined stream targets (combine of layer i overlapping the
+dispatch of layer i+1, MegaScale-MoE style): run with
+``--engine fused_pipe --moe-stream <block>`` to fuse blocks of layers into
+one shard_map island (``layers/moe.stream_moe_layers``), or with
+``--moe-stream 0`` for the per-layer-barrier baseline the benchmarks compare
+against.  Not one of the assigned archs (excluded from ARCH_IDS, like
+deepseek-v3-bench).
+"""
+
+from repro.configs.base import ArchConfig, MoESpec
+
+ARCH = ArchConfig(
+    name="moe-ffn-stream-1b",
+    family="moe_ffn",
+    n_layers=16,
+    d_model=1024,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=32768,
+    moe=MoESpec(n_experts=64, top_k=4, d_ff_expert=1024),
+    source="stream benchmark setting (cross-layer pipelined dComm)",
+)

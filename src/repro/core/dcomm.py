@@ -15,15 +15,28 @@ fused_flat    1          capacity   no          ONE descriptor-driven gather sta
                                                 permutation passes (the dComm
                                                 property).
 fused_pipe    1          capacity   **yes**     Same flat plan, but the staging buffer
-                                                is split into S slices along the
-                                                capacity axis and streamed: slice i's
+                                    (+cross-    is split into S slices along the
+                                    layer)      capacity axis and streamed: slice i's
                                                 grouped FFN + combine overlap slice
                                                 i+1's gather + all_to_all (double-
                                                 buffered ``lax.scan`` carry — the
                                                 paper's producer/consumer ring,
                                                 Fig. 5).  S comes from
                                                 ``pipesim.plan_slices`` or the
-                                                ``pipe_slices`` knob.
+                                                ``pipe_slices`` knob.  The slice
+                                                primitives are split into issue/
+                                                consume halves; a shuffle can end
+                                                with its tail slice still in flight
+                                                (``PipeTail``), which is how
+                                                ``fusco.pipe_layer_stream`` removes
+                                                the per-layer barrier between the
+                                                combine of MoE layer i and the
+                                                dispatch of layer i+1 (joint slice
+                                                count from
+                                                ``pipesim.plan_layer_stream``; see
+                                                its honesty note on when the
+                                                boundary window is actually
+                                                fillable).
 fused_hier    2          capacity   no          Node-level forwarding with dedup (one
                                                 copy per token per destination node,
                                                 forwarder lane picked by the Online
@@ -39,9 +52,14 @@ disagg        1          capacity   no          The disaggregated baseline (§2.
                                                 each sort a materialised permutation.
 ragged        1          none       no          ``jax.lax.ragged_all_to_all`` whose
                                                 offset/size operands ARE the segment
-                                                descriptors.  TPU-only (XLA:CPU can't
-                                                compile it); descriptor construction
-                                                is unit-tested on CPU.
+                                                descriptors, both directions: combine
+                                                runs the reverse exchange with the
+                                                send/recv roles swapped
+                                                (``ragged_reverse_descriptors``) and
+                                                scatter-adds straight home.  TPU-only
+                                                (XLA:CPU can't compile it);
+                                                descriptor construction + inversion
+                                                are unit-tested on CPU.
 ============  =========  =========  ==========  =====================================
 
 All entry points run **inside shard_map** over the expert-parallel axis/axes.
@@ -172,41 +190,56 @@ def flat_combine(expert_out: jax.Array, res: DispatchResult,
 
 
 # ======================================================================
-# fused_pipe — the paper's pipelined engine (Fig. 5) on the flat plan
+# fused_pipe — the paper's pipelined engine (Fig. 5) on the flat plan,
+# split into issue/consume slice primitives so a schedule (single-shuffle
+# or cross-layer stream) can hold slices in flight explicitly.
 # ======================================================================
 
-def _pipe_slice_plan(x: jax.Array, A: jax.Array, gates: jax.Array,
-                     placement: ExpertPlacement, cfg: DcommConfig):
-    """Build the flat plan with capacity rounded so it splits into S slices.
+def pipe_geometry(t: int, k: int, d: int, itemsize: int,
+                  placement: ExpertPlacement, cfg: DcommConfig,
+                  n_layers: int = 1) -> tuple[int, int]:
+    """(capacity, n_slices) for a pipelined shuffle — static trace-time plan.
 
-    S is ``cfg.pipe_slices`` when set, else the pipesim knee for the staging
-    buffer's byte volume at the config's hardware point, clamped so every
-    slice keeps at least one row per (lane, expert) sub-slot.
+    S is ``cfg.pipe_slices`` when set; else the pipesim knee for the staging
+    buffer's byte volume at the config's hardware point (the *joint*
+    cross-layer knee from :func:`pipesim.plan_layer_stream` when the shuffle
+    is one layer of an ``n_layers`` stream), clamped so every slice keeps at
+    least one row per (lane, expert) sub-slot.  Capacity is rounded up to a
+    multiple of S.
     """
-    t, d = x.shape
-    k = A.shape[1]
     e_local = placement.experts_per_lane
     cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
     if cfg.pipe_slices > 0:
         s = cfg.pipe_slices
     else:
-        payload = float(placement.ep * e_local * cap * d * x.dtype.itemsize)
-        s = pipesim.plan_slices(
-            pipesim.PipeParams(payload_bytes=payload,
+        payload = float(placement.ep * e_local * cap * d * itemsize)
+        p = pipesim.PipeParams(payload_bytes=payload,
                                stage_bw=cfg.pipe_stage_bw,
                                wire_bw=cfg.pipe_wire_bw,
-                               per_slice_overhead_s=cfg.pipe_overhead_s),
-        )["n_slices"]
+                               per_slice_overhead_s=cfg.pipe_overhead_s)
+        if n_layers > 1:
+            s = pipesim.plan_layer_stream(p, n_layers)["n_slices"]
+        else:
+            s = pipesim.plan_slices(p)["n_slices"]
     s = max(1, min(int(s), cap))
     cap = int(-(-cap // s)) * s                       # round up to S slices
+    return cap, s
+
+
+def _pipe_slice_plan(x: jax.Array, A: jax.Array, gates: jax.Array,
+                     placement: ExpertPlacement, cfg: DcommConfig):
+    """Build the flat plan with capacity rounded so it splits into S slices."""
+    t, d = x.shape
+    cap, s = pipe_geometry(t, A.shape[1], d, x.dtype.itemsize, placement, cfg)
     plan = planner_lib.build_flat_plan(A, gates, placement, cap)
     sliced = planner_lib.slice_flat_plan(plan, placement, cap, s)
     return plan, sliced, cap, s
 
 
-def _pipe_comm(x: jax.Array, src_slice: jax.Array, placement: ExpertPlacement,
+def pipe_issue(x: jax.Array, src_slice: jax.Array, placement: ExpertPlacement,
                cfg: DcommConfig) -> jax.Array:
-    """Stage + wire one slice: descriptor gather → tiled exchange.
+    """Producer half of one slice: descriptor gather stages it, the tiled
+    exchange puts it on the wire.
 
     ``src_slice`` is (EP, E_local, Cs); returns the landed (EP(source lane),
     E_local, Cs, d) sub-buffer — the same layout as ``fused_flat``, one
@@ -219,17 +252,102 @@ def _pipe_comm(x: jax.Array, src_slice: jax.Array, placement: ExpertPlacement,
     return buf.reshape(ep, e_local, cs, d)
 
 
-def _pipe_return(y: jax.Array, out_slice: jax.Array, src_slice: jax.Array,
-                 gate_slice: jax.Array, t: int, placement: ExpertPlacement,
-                 cfg: DcommConfig) -> jax.Array:
-    """Return one slice: reverse exchange → weighted scatter-add into ``y``."""
+def pipe_return_issue(out_slice: jax.Array, placement: ExpertPlacement,
+                      cfg: DcommConfig) -> jax.Array:
+    """Wire half of one slice's combine: reverse tiled exchange of the expert
+    outputs; returns the (EP*E_local*Cs, d) rows back on their origin lane."""
     ep = placement.ep
     e_local, cs, d = out_slice.shape[1:]
     buf = _flat_exchange(out_slice.reshape(ep, e_local * cs, d), cfg, ep,
                          reverse=True)
-    buf = buf.reshape(ep * e_local * cs, d)
-    w = gate_slice.reshape(-1, 1).astype(buf.dtype)
-    return y.at[drop_neg(src_slice.reshape(-1), t)].add(buf * w, mode="drop")
+    return buf.reshape(ep * e_local * cs, d)
+
+
+def pipe_return_consume(y: jax.Array, returned: jax.Array,
+                        src_slice: jax.Array, gate_slice: jax.Array,
+                        t: int) -> jax.Array:
+    """Local half of one slice's combine: weighted scatter-add into ``y``."""
+    w = gate_slice.reshape(-1, 1).astype(returned.dtype)
+    return y.at[drop_neg(src_slice.reshape(-1), t)].add(returned * w,
+                                                        mode="drop")
+
+
+def pipe_consume(y: jax.Array, landed: jax.Array, src_slice: jax.Array,
+                 gate_slice: jax.Array,
+                 ffn: Callable[[jax.Array], jax.Array], t: int,
+                 placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    """Consumer half of one slice: grouped FFN + both combine halves.
+    ``landed`` is a (EP, E_local, Cs, d) sub-buffer from :func:`pipe_issue`;
+    ``ffn`` maps it to expert outputs of the same shape."""
+    returned = pipe_return_issue(ffn(landed), placement, cfg)
+    return pipe_return_consume(y, returned, src_slice, gate_slice, t)
+
+
+class PipeTail(NamedTuple):
+    """The in-flight queue entry that survives a shuffle's epilogue: one slice
+    whose combine *exchange* has been issued but whose scatter-add has not
+    landed.  Carrying it across a layer boundary removes the per-layer
+    *program* barrier in the cross-layer stream — the boundary becomes one
+    async-ready exchange instead of a materialised layer output.  The window
+    it opens is only *filled* when the schedule has tail-independent work to
+    co-locate there (see the honesty note on ``fusco.pipe_layer_stream``).
+    """
+    returned: jax.Array        # (EP*E_local*Cs, d) reverse-exchanged outputs
+    src: jax.Array             # (EP, E_local, Cs) origin token per slot
+    gate: jax.Array            # (EP, E_local, Cs) combine weight per slot
+
+
+def pipe_empty_tail(placement: ExpertPlacement, cs: int, d: int,
+                    dtype, gate_dtype) -> PipeTail:
+    """A tail whose consumption is a no-op (all slots empty) — the stream's
+    initial carry before any layer has a slice in flight."""
+    ep, e_local = placement.ep, placement.experts_per_lane
+    return PipeTail(jnp.zeros((ep * e_local * cs, d), dtype),
+                    jnp.full((ep, e_local, cs), -1, I32),
+                    jnp.zeros((ep, e_local, cs), gate_dtype))
+
+
+def pipe_tail_consume(y: jax.Array, tail: PipeTail, t: int) -> jax.Array:
+    """Land a deferred tail slice: the scatter-add that completes ``y``."""
+    return pipe_return_consume(y, tail.returned, tail.src, tail.gate, t)
+
+
+def pipe_shuffle_ffn_stream(x: jax.Array, A: jax.Array, gates: jax.Array,
+                            ffn: Callable[[jax.Array], jax.Array],
+                            placement: ExpertPlacement, cfg: DcommConfig,
+                            y0: jax.Array | None = None
+                            ) -> tuple[jax.Array, PipeTail]:
+    """One shuffle of the cross-layer stream: pipelined like
+    :func:`pipe_shuffle_ffn`, but the tail slice's scatter-add is NOT taken —
+    its combine exchange is issued and handed back as a :class:`PipeTail` for
+    the caller to land later (typically in the next layer's prologue, after
+    which the next router runs).  ``y0`` seeds the accumulator (the residual
+    stream input), so the returned partial output is ``y0 + all but the tail
+    slice's contribution``.
+    """
+    t, d = x.shape
+    _, sliced, _, s = _pipe_slice_plan(x, A, gates, placement, cfg)
+
+    def consume(y, landed, src_slice, gate_slice):
+        return pipe_consume(y, landed, src_slice, gate_slice, ffn, t,
+                            placement, cfg)
+
+    y = jnp.zeros((t, d), x.dtype) if y0 is None else y0
+    landed = pipe_issue(x, sliced.src[0], placement, cfg)    # prologue: slice 0
+    if s > 1:
+        def body(carry, xs):
+            y, landed = carry
+            src_next, src_cur, gate_cur = xs
+            landed_next = pipe_issue(x, src_next, placement, cfg)
+            y = consume(y, landed, src_cur, gate_cur)        # overlaps the wire
+            return (y, landed_next), None
+        (y, landed), _ = jax.lax.scan(
+            body, (y, landed),
+            (sliced.src[1:], sliced.src[:-1], sliced.gate[:-1]))
+    # tail: FFN + combine exchange issued; the scatter-add is deferred.
+    out = ffn(landed)
+    returned = pipe_return_issue(out, placement, cfg)
+    return y, PipeTail(returned, sliced.src[-1], sliced.gate[-1])
 
 
 def pipe_shuffle_ffn(x: jax.Array, A: jax.Array, gates: jax.Array,
@@ -245,26 +363,8 @@ def pipe_shuffle_ffn(x: jax.Array, A: jax.Array, gates: jax.Array,
     ``ffn`` maps a landed (EP, E_local, Cs, d) sub-buffer to expert outputs of
     the same shape.
     """
-    t, d = x.shape
-    _, sliced, _, s = _pipe_slice_plan(x, A, gates, placement, cfg)
-
-    def consume(y, landed, src_slice, gate_slice):
-        return _pipe_return(y, ffn(landed), src_slice, gate_slice, t,
-                            placement, cfg)
-
-    y = jnp.zeros((t, d), x.dtype)
-    landed = _pipe_comm(x, sliced.src[0], placement, cfg)    # prologue: slice 0
-    if s > 1:
-        def body(carry, xs):
-            y, landed = carry
-            src_next, src_cur, gate_cur = xs
-            landed_next = _pipe_comm(x, src_next, placement, cfg)
-            y = consume(y, landed, src_cur, gate_cur)        # overlaps the wire
-            return (y, landed_next), None
-        (y, landed), _ = jax.lax.scan(
-            body, (y, landed),
-            (sliced.src[1:], sliced.src[:-1], sliced.gate[:-1]))
-    return consume(y, landed, sliced.src[-1], sliced.gate[-1])
+    y, tail = pipe_shuffle_ffn_stream(x, A, gates, ffn, placement, cfg)
+    return pipe_tail_consume(y, tail, x.shape[0])
 
 
 def pipe_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
@@ -275,7 +375,7 @@ def pipe_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     e_local = placement.experts_per_lane
     _, sliced, cap, s = _pipe_slice_plan(x, A, gates, placement, cfg)
     landed = jax.lax.map(
-        lambda src: _pipe_comm(x, src, placement, cfg), sliced.src)
+        lambda src: pipe_issue(x, src, placement, cfg), sliced.src)
     # (S, EP, E_local, Cs, d) -> (EP, E_local, C, d): slices are capacity stripes
     expert_rows = landed.transpose(1, 2, 0, 3, 4).reshape(
         placement.ep, e_local, cap, d)
@@ -292,7 +392,8 @@ def pipe_combine(expert_out: jax.Array, res: DispatchResult,
 
     def body(y, xs):
         out_s, src_s, gate_s = xs
-        return _pipe_return(y, out_s, src_s, gate_s, t, placement, cfg), None
+        returned = pipe_return_issue(out_s, placement, cfg)
+        return pipe_return_consume(y, returned, src_s, gate_s, t), None
 
     y, _ = jax.lax.scan(body, jnp.zeros((t, d), expert_out.dtype),
                         (out, sliced.src, sliced.gate))
@@ -471,15 +572,15 @@ def disagg_combine(expert_out: jax.Array, res: DispatchResult,
 # ragged — TPU production engine (true FUSCO descriptor semantics)
 # ======================================================================
 
-def build_ragged_descriptors(plan: planner_lib.FlatPlan,
-                             placement: ExpertPlacement, cap: int):
+class RaggedDescriptors(NamedTuple):
     """Sender-side ragged_all_to_all descriptors from a flat plan.
 
-    Returns (compact_src, input_offsets, send_sizes):
       * ``compact_src``  — (R,) source token row per COMPACT send-buffer row
         (dense slot layout squeezed; -1 tail padding).  This is the sender
         segment-descriptor list of the paper: row i of the wire buffer is
         token ``compact_src[i]``.
+      * ``compact_gate`` — (R,) combine weight aligned with ``compact_src``
+        (what the reverse exchange scatter-adds home with).
       * ``input_offsets``/``send_sizes`` — per destination lane, the classic
         (address, size) pair over the compact buffer.
 
@@ -487,6 +588,15 @@ def build_ragged_descriptors(plan: planner_lib.FlatPlan,
     cumulative layout, exchanged with the counts at runtime — the paper's
     receiver descriptor, named by the sender (§3.2).
     """
+    compact_src: jax.Array
+    compact_gate: jax.Array
+    input_offsets: jax.Array
+    send_sizes: jax.Array
+
+
+def build_ragged_descriptors(plan: planner_lib.FlatPlan,
+                             placement: ExpertPlacement,
+                             cap: int) -> RaggedDescriptors:
     e_local = placement.experts_per_lane
     counts = jnp.minimum(plan.slots.counts.reshape(placement.ep, e_local), cap)
     send_sizes = counts.sum(axis=1).astype(I32)                 # (EP,)
@@ -497,10 +607,35 @@ def build_ragged_descriptors(plan: planner_lib.FlatPlan,
     order = jnp.argsort(~occupied, stable=True)                 # occupied first
     # rows stay in slot order within the occupied prefix because argsort is
     # stable — exactly (lane-major, expert-major, arrival-order)
+    in_prefix = jnp.arange(order.shape[0]) < occupied.sum()
     compact_src = jnp.where(
-        jnp.arange(order.shape[0]) < occupied.sum(),
-        jnp.take(plan.src_of_slot, order), -1).astype(I32)
-    return compact_src, input_offsets, send_sizes
+        in_prefix, jnp.take(plan.src_of_slot, order), -1).astype(I32)
+    compact_gate = jnp.where(
+        in_prefix, jnp.take(plan.gate_of_slot, order),
+        0).astype(plan.gate_of_slot.dtype)
+    return RaggedDescriptors(compact_src, compact_gate, input_offsets,
+                             send_sizes)
+
+
+def ragged_reverse_descriptors(input_offsets: jax.Array, send_sizes: jax.Array,
+                               recv_offsets: jax.Array, recv_sizes: jax.Array,
+                               peer_input_offsets: jax.Array):
+    """Invert a ragged exchange's descriptors for the combine direction.
+
+    The reverse exchange swaps the send/recv roles: what this lane received
+    from lane p (``recv_offsets[p]``/``recv_sizes[p]``) it now sends back,
+    landing at lane p's original compact-buffer segment — whose start is p's
+    forward ``input_offsets`` entry for us, i.e. the all_to_all-exchanged
+    ``peer_input_offsets``.  Returns the reverse
+    (input_offsets, send_sizes, output_offsets, recv_sizes) quadruple.
+    """
+    return recv_offsets, recv_sizes, peer_input_offsets, send_sizes
+
+
+def _a2a_vec(v: jax.Array, ep: int, axis) -> jax.Array:
+    """Exchange one scalar per peer over the EP axis."""
+    return jax.lax.all_to_all(v.reshape(ep, 1), axis, 0, 0,
+                              tiled=True).reshape(ep)
 
 
 def ragged_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
@@ -513,22 +648,45 @@ def ragged_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     e_local = placement.experts_per_lane
     cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
     plan = planner_lib.build_flat_plan(A, gates, placement, cap)
-    compact_src, offs, send_sizes = build_ragged_descriptors(plan, placement, cap)
+    desc = build_ragged_descriptors(plan, placement, cap)
+    offs, send_sizes = desc.input_offsets, desc.send_sizes
 
-    send_buf = gather_rows(x, compact_src)                      # fused stage copy
+    send_buf = gather_rows(x, desc.compact_src)                 # fused stage copy
     # exchange counts, derive receiver placement (paper: sender names the
     # receiver offsets — they are the receiver's cumulative layout)
-    recv_sizes = jax.lax.all_to_all(
-        send_sizes.reshape(placement.ep, 1), cfg.model_axis, 0, 0,
-        tiled=True).reshape(placement.ep)
+    recv_sizes = _a2a_vec(send_sizes, placement.ep, cfg.model_axis)
     recv_offs = jnp.concatenate([jnp.zeros((1,), I32),
                                  jnp.cumsum(recv_sizes)[:-1].astype(I32)])
-    out_offsets = jax.lax.all_to_all(
-        recv_offs.reshape(placement.ep, 1), cfg.model_axis, 0, 0,
-        tiled=True).reshape(placement.ep)
+    out_offsets = _a2a_vec(recv_offs, placement.ep, cfg.model_axis)
     out_buf = jnp.zeros((placement.ep * e_local * cap, d), x.dtype)
     landed = ragged_all_to_all(
         send_buf, out_buf, offs, send_sizes, out_offsets, recv_sizes,
         axis_name=cfg.model_axis)
     return DispatchResult(landed.reshape(1, 1, placement.ep * e_local * cap, d),
-                          None, (plan, t, d, cap, send_sizes, recv_sizes))
+                          None, (desc, t, d, cap, recv_offs, recv_sizes))
+
+
+def ragged_combine(expert_out: jax.Array, res: DispatchResult,
+                   placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    """Reverse ragged exchange + weighted scatter-add home (TPU-only, like
+    dispatch).  The reverse descriptors are the forward ones with send/recv
+    roles swapped (:func:`ragged_reverse_descriptors`); returned compact rows
+    line up with ``compact_src``/``compact_gate`` by construction, so the
+    combine is one fused weighted scatter-add — no unpacking pass.
+    """
+    desc, t, d, cap, recv_offs, recv_sizes = res.state
+    ep = placement.ep
+    # each peer needs our forward input_offsets to know where its return
+    # segment lands in our compact buffer — one more descriptor exchange.
+    peer_offs = _a2a_vec(desc.input_offsets, ep, cfg.model_axis)
+    rev = ragged_reverse_descriptors(desc.input_offsets, desc.send_sizes,
+                                     recv_offs, recv_sizes, peer_offs)
+    rev_in_offs, rev_send_sizes, rev_out_offs, rev_recv_sizes = rev
+    flat = expert_out.reshape(-1, d)
+    back_buf = jnp.zeros((desc.compact_src.shape[0], d), flat.dtype)
+    back = ragged_all_to_all(
+        flat, back_buf, rev_in_offs, rev_send_sizes, rev_out_offs,
+        rev_recv_sizes, axis_name=cfg.model_axis)
+    w = desc.compact_gate[:, None].astype(back.dtype)
+    return jnp.zeros((t, d), back.dtype).at[
+        drop_neg(desc.compact_src, t)].add(back * w, mode="drop")

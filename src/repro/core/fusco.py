@@ -7,10 +7,16 @@ over the expert-parallel axis and gets back combined expert outputs in the
 original token layout.  Engine choice, hierarchy and balancer are config.
 
 Also provides :func:`dense_moe_reference` — the per-token dense oracle used by
-tests to validate every engine bit-for-bit (up to dtype tolerance).
+tests to validate every engine bit-for-bit (up to dtype tolerance) — and the
+cross-layer stream API :func:`pipe_layer_stream` / :func:`layer_stream`:
+N consecutive MoE layers chained through one pipelined schedule where the
+combine of layer i overlaps the dispatch of layer i+1 (MegaScale-MoE-style),
+with :func:`stream_dense_reference` as its stacked dense oracle.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import dcomm
 from repro.core.dcomm import DcommConfig, DispatchResult
 from repro.core.routing import (ExpertPlacement, router_logits, top_k_routing)
+from repro.layers.common import rms_norm
 
 
 def swiglu_experts(rows: jax.Array, w1: jax.Array, w3: jax.Array,
@@ -60,6 +67,8 @@ def combine(expert_out, res: DispatchResult, placement, cfg: DcommConfig,
         return dcomm.hier_combine(expert_out, res, placement, cfg)
     if cfg.engine == "disagg":
         return dcomm.disagg_combine(expert_out, res, placement, cfg, gates)
+    if cfg.engine == "ragged":
+        return dcomm.ragged_combine(expert_out, res, placement, cfg)
     raise ValueError(f"unknown engine {cfg.engine!r}")
 
 
@@ -97,6 +106,130 @@ def moe_shuffle_ffn(x: jax.Array, w_router: jax.Array, w1: jax.Array,
     A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
     return shuffle_ffn(x, A, gates.astype(x.dtype), w1, w3, w2, placement,
                        cfg, assignment)
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer pipelined MoE stream
+# ---------------------------------------------------------------------------
+
+def _stream_layer_io(h, lp, top_k, norm_topk):
+    """Shared pre-shuffle work of one stream layer: optional pre-norm +
+    routing.  ``lp`` is the layer's parameter dict (ln may be None)."""
+    u = rms_norm(h, lp["ln"]) if lp.get("ln") is not None else h
+    logits = router_logits(u, lp["router"])
+    A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
+    return u, A, gates.astype(h.dtype)
+
+
+def _stack_stream_params(w_router, w1, w3, w2, ln):
+    """Per-layer xs for the layer scan; ln folded in when present."""
+    lp = {"router": w_router, "w1": w1, "w3": w3, "w2": w2}
+    if ln is not None:
+        lp["ln"] = ln
+    return lp
+
+
+def pipe_layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,
+                      w3: jax.Array, w2: jax.Array,
+                      placement: ExpertPlacement, cfg: DcommConfig,
+                      top_k: int, ln: jax.Array | None = None,
+                      norm_topk: bool = True) -> jax.Array:
+    """Chain N consecutive MoE layers through ONE pipelined schedule.
+
+    ``w_router``: (N, d, E) replicated; ``w1``/``w3``: (N, E_local, d, f) and
+    ``w2``: (N, E_local, f, d) this lane's expert slices; ``ln``: optional
+    (N, d) pre-norm scales.  Each layer computes the residual update
+    ``h <- h + moe_l(norm_l(h))``.
+
+    What the stream changes vs. one ``pipe_shuffle_ffn`` per layer:
+
+      * the per-layer *program* barrier is gone — layer l's shuffle ends
+        with its tail slice's combine exchange still in flight
+        (:class:`dcomm.PipeTail`) and the deferred scatter-add lands in
+        layer l+1's prologue, so the boundary is a single async-ready
+        exchange rather than a fully materialised layer output;
+      * the slice count is chosen JOINTLY for the whole chain via
+        :func:`pipesim.plan_layer_stream` (all layers must share one static
+        slice geometry so the carried tail shape is invariant);
+      * each layer's residual seeds the accumulator directly (``y0=h``),
+        fusing the residual add into the combine scatter-add.
+
+    Honesty note on overlap: in this *pure* MoE chain, layer l+1's router
+    reads the completed ``h``, so the deferred tail has no tail-independent
+    compute to hide behind at the boundary — the dependency chain equals the
+    barrier path's, and XLA cannot overlap the boundary exchange with
+    anything *inside this function*.  The MegaScale-MoE win materialises
+    when the window holds independent work: co-scheduled non-MoE compute
+    (attention between MoE layers) or a second token micro-batch interleaved
+    through the same stream — both open items in ROADMAP.md.  ``PipeTail``
+    is the structure that makes such co-scheduling expressible at all.
+
+    Runs inside shard_map over the EP axis/axes, like every engine entry
+    point.  Gradient-parity with :func:`stream_dense_reference` is covered by
+    ``tests/test_engine_grads.py``.
+    """
+    if cfg.engine != "fused_pipe":
+        raise ValueError(
+            f"pipe_layer_stream requires engine='fused_pipe', got {cfg.engine!r}")
+    t, d = x.shape
+    n_layers = w_router.shape[0]
+    cap, s = dcomm.pipe_geometry(t, top_k, d, x.dtype.itemsize, placement,
+                                 cfg, n_layers=n_layers)
+    cfg = dataclasses.replace(cfg, pipe_slices=s)     # freeze the joint plan
+    cs = cap // s
+
+    def layer(carry, lp):
+        h, tail = carry
+        h = dcomm.pipe_tail_consume(h, tail, t)       # land layer l-1's tail
+        u, A, gates = _stream_layer_io(h, lp, top_k, norm_topk)
+        ffn = lambda rows: swiglu_experts(rows, lp["w1"], lp["w3"], lp["w2"])
+        y, tail = dcomm.pipe_shuffle_ffn_stream(u, A, gates, ffn, placement,
+                                                cfg, y0=h)    # residual seed
+        return (y, tail), None
+
+    tail0 = dcomm.pipe_empty_tail(placement, cs, d, x.dtype, x.dtype)
+    (h, tail), _ = jax.lax.scan(
+        layer, (x, tail0), _stack_stream_params(w_router, w1, w3, w2, ln))
+    return dcomm.pipe_tail_consume(h, tail, t)        # epilogue: last tail
+
+
+def layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,
+                 w3: jax.Array, w2: jax.Array, placement: ExpertPlacement,
+                 cfg: DcommConfig, top_k: int, ln: jax.Array | None = None,
+                 norm_topk: bool = True, stream: bool = True) -> jax.Array:
+    """Stream dispatch table: the cross-layer pipelined schedule when the
+    engine supports it, else the per-layer-barrier fallback (each layer a
+    full :func:`shuffle_ffn`, any engine).  Same layout contract and result
+    as :func:`pipe_layer_stream`."""
+    if stream and cfg.engine == "fused_pipe":
+        return pipe_layer_stream(x, w_router, w1, w3, w2, placement, cfg,
+                                 top_k, ln=ln, norm_topk=norm_topk)
+
+    def layer(h, lp):
+        u, A, gates = _stream_layer_io(h, lp, top_k, norm_topk)
+        y = shuffle_ffn(u, A, gates, lp["w1"], lp["w3"], lp["w2"], placement,
+                        cfg)
+        return h + y, None
+
+    h, _ = jax.lax.scan(layer, x,
+                        _stack_stream_params(w_router, w1, w3, w2, ln))
+    return h
+
+
+def stream_dense_reference(x: jax.Array, w_router: jax.Array,
+                           w1_all: jax.Array, w3_all: jax.Array,
+                           w2_all: jax.Array, top_k: int,
+                           ln: jax.Array | None = None,
+                           norm_topk: bool = True) -> jax.Array:
+    """Oracle for the layer stream: the same residual chain evaluated with
+    the per-token dense reference.  ``w*_all`` hold ALL experts per layer:
+    (N, E, d, f)/(N, E, f, d)."""
+    h = x
+    for l in range(w_router.shape[0]):
+        u = rms_norm(h, ln[l]) if ln is not None else h
+        h = h + dense_moe_reference(u, w_router[l], w1_all[l], w3_all[l],
+                                    w2_all[l], top_k, norm_topk=norm_topk)
+    return h
 
 
 def dense_moe_reference(x: jax.Array, w_router: jax.Array, w1_all: jax.Array,

@@ -73,15 +73,36 @@ def sweep(p: PipeParams, slice_sizes) -> list[dict]:
     return out
 
 
-def best_slice(p: PipeParams, lo: float = 4096, hi: float = 2 ** 26) -> dict:
-    """Geometric sweep → the knee (max efficiency, smallest slice on ties)."""
+def _geometric_sizes(lo: float = 4096, hi: float = 2 ** 26) -> list[float]:
     sizes = []
     s = lo
     while s <= hi:
         sizes.append(s)
         s *= 2
-    results = sweep(p, sizes)
-    return max(results, key=lambda r: (round(r["efficiency"], 4), -r["slice_bytes"]))
+    return sizes
+
+
+def _knee(results: list[dict]) -> dict:
+    """Max efficiency, smallest slice on ties."""
+    return max(results,
+               key=lambda r: (round(r["efficiency"], 4), -r["slice_bytes"]))
+
+
+def _with_slice_count(p: PipeParams, best: dict,
+                      max_slices: int | None) -> dict:
+    """Convert a knee slice size into the slice *count* a statically-shaped
+    engine needs; returns a copy of ``best`` extended with ``n_slices``."""
+    n = max(1, int(-(-p.payload_bytes // best["slice_bytes"])))
+    if max_slices is not None:
+        n = min(n, max_slices)
+    b = dict(best)
+    b["n_slices"] = n
+    return b
+
+
+def best_slice(p: PipeParams, lo: float = 4096, hi: float = 2 ** 26) -> dict:
+    """Geometric sweep → the knee (max efficiency, smallest slice on ties)."""
+    return _knee(sweep(p, _geometric_sizes(lo, hi)))
 
 
 def plan_slices(p: PipeParams, payload_bytes: float | None = None,
@@ -95,9 +116,63 @@ def plan_slices(p: PipeParams, payload_bytes: float | None = None,
     """
     if payload_bytes is not None:
         p = dataclasses.replace(p, payload_bytes=float(payload_bytes))
-    b = dict(best_slice(p))
-    n = max(1, int(-(-p.payload_bytes // b["slice_bytes"])))
-    if max_slices is not None:
-        n = min(n, max_slices)
-    b["n_slices"] = n
-    return b
+    return _with_slice_count(p, best_slice(p), max_slices)
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer stream (MegaScale-MoE-style: combine of layer i overlaps
+# dispatch of layer i+1)
+# ---------------------------------------------------------------------------
+
+def simulate_layer_stream(p: PipeParams, slice_bytes: float,
+                          n_layers: int) -> dict:
+    """Model a chain of ``n_layers`` identical shuffles streamed back to back.
+
+    The per-layer pipeline is :func:`simulate`.  A *barriered* chain pays the
+    full per-layer total at every layer.  The *streamed* chain keeps the tail
+    slice of layer i's combine on the wire across the layer boundary, hiding
+    up to the smaller of (tail wire time, head staging time) per boundary.
+    This is the BEST-CASE window of the structure the cross-layer engine
+    exposes (``dcomm.pipe_shuffle_ffn_stream`` deferring the tail scatter-add
+    into the next layer's prologue): realising it requires tail-independent
+    work co-scheduled at the boundary — a pure serial MoE chain has none
+    (see the honesty note on ``fusco.pipe_layer_stream``), interleaved
+    micro-batches or inter-layer attention do.
+    """
+    per = simulate(p, slice_bytes)
+    stage_t = slice_bytes / p.stage_bw + p.per_slice_overhead_s
+    wire_t = slice_bytes / p.wire_bw
+    overlap = min(stage_t, wire_t)
+    barriered = n_layers * per["total_s"]
+    streamed = barriered - (n_layers - 1) * overlap
+    wire_floor = n_layers * per["wire_bound_s"]
+    return {
+        "n_layers": n_layers,
+        "n_slices": per["n_slices"],
+        "slice_bytes": slice_bytes,
+        "per_layer_s": per["total_s"],
+        "barriered_s": barriered,
+        "total_s": streamed,
+        "overlap_per_boundary_s": overlap,
+        "speedup_vs_barriered": barriered / streamed,
+        "efficiency": wire_floor / streamed,
+    }
+
+
+def plan_layer_stream(p: PipeParams, n_layers: int,
+                      payload_bytes: float | None = None,
+                      max_slices: int | None = None) -> dict:
+    """Joint slice plan for a chain of layers: one slice count for all.
+
+    The cross-layer engine needs a single static slice count shared by every
+    layer in the stream (the deferred tail slice of layer i must have the
+    same shape as layer i+1's slices).  Sweeps slice sizes and picks the knee
+    of *streamed* efficiency — which can differ from the per-shuffle knee of
+    :func:`plan_slices` because larger slices widen the per-boundary overlap
+    window while smaller ones pipeline better within a layer.
+    """
+    if payload_bytes is not None:
+        p = dataclasses.replace(p, payload_bytes=float(payload_bytes))
+    best = _knee([simulate_layer_stream(p, sz, n_layers)
+                  for sz in _geometric_sizes()])
+    return _with_slice_count(p, best, max_slices)

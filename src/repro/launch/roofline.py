@@ -162,7 +162,7 @@ def count_matmul_params(cfg) -> float:
                   + cfg.n_heads * hd * d)
     if cfg.family in ("dense", "vlm", "hybrid"):
         n += L * 3 * d * cfg.d_ff
-    if cfg.family == "moe":
+    if cfg.family in ("moe", "moe_ffn"):
         n += L * d * cfg.moe.n_experts          # router
     if cfg.family in ("ssm", "hybrid"):
         s = cfg.ssm
@@ -182,7 +182,7 @@ def count_matmul_params(cfg) -> float:
 
 def active_moe_params(cfg) -> float:
     """Active expert params per token (MoE: 6·N_active·D convention)."""
-    if cfg.family != "moe":
+    if cfg.family not in ("moe", "moe_ffn"):
         return 0.0
     return cfg.n_layers * cfg.moe.top_k * 3 * cfg.d_model * cfg.moe.d_ff_expert
 

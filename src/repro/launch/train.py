@@ -41,6 +41,13 @@ def main(argv=None):
     ap.add_argument("--capacity-factor", type=float, default=2.0)
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--moe-stream", type=int, default=0,
+                    help="moe_ffn family: layers per cross-layer stream "
+                         "block (fused_pipe overlaps combine of layer i with "
+                         "dispatch of layer i+1 inside a block); 0 = "
+                         "per-layer islands")
+    ap.add_argument("--pipe-slices", type=int, default=0,
+                    help="fused_pipe slice count; 0 = auto via pipesim")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -49,7 +56,9 @@ def main(argv=None):
     mesh = make_host_mesh()
     ctx = make_context(cfg, mesh, multi_pod=False, engine=args.engine,
                        capacity_factor=args.capacity_factor,
-                       node_size=max(1, mesh.shape["model"] // 2))
+                       node_size=max(1, mesh.shape["model"] // 2),
+                       moe_stream=args.moe_stream,
+                       pipe_slices=args.pipe_slices)
     bundle = zoo.build(cfg, ctx)
 
     key = jax.random.PRNGKey(0)

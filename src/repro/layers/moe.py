@@ -2,8 +2,18 @@
 
 The shard_map island: dense parts of the model run under GSPMD; the token
 shuffle runs manually over the expert-parallel axes with the engine picked by
-``DcommConfig`` (fused_flat / fused_hier / disagg / ragged).  This is the
-"thin adaptation layer" of paper §4.
+``DcommConfig`` (fused_flat / fused_pipe / fused_hier / disagg / ragged).
+This is the "thin adaptation layer" of paper §4.
+
+Two island granularities:
+
+  * :func:`moe_block` — ONE MoE layer per island (norm + residual live
+    outside); every layer ends with a full barrier before the next.
+  * :func:`stream_moe_layers` — a BLOCK of consecutive MoE layers in one
+    island, chained through ``fusco.layer_stream``: with the ``fused_pipe``
+    engine the combine of layer i overlaps the dispatch of layer i+1
+    (cross-layer stream), so each layer's pre-norm and residual run inside
+    the island too.
 """
 
 from __future__ import annotations
@@ -58,6 +68,62 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
                    out_specs=x_spec, check_vma=False)
     return fn(x, moe_params["router"], moe_params["w1"], moe_params["w3"],
               moe_params["w2"])
+
+
+def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
+                      mesh, placement: ExpertPlacement, dcfg: DcommConfig,
+                      top_k: int, data_axes=("data",), norm_topk: bool = True,
+                      stream: bool = True, fsdp: bool = False) -> jax.Array:
+    """A block of N consecutive MoE layers fused into ONE shard_map island.
+
+    x: (B, S, d) global.  ``moe_params`` holds the block's stacked weights:
+    router (N, d, E) replicated, w1/w3 (N, E_lanes, E_local, d, f) and
+    w2 (N, E_lanes, E_local, f, d) lane-major over the EP axes.  ``ln`` is
+    the (N, d) pre-norm scales (None: no pre-norm).  Each layer applies the
+    residual update ``h <- h + moe_l(rms_norm_l(h))`` — norm and residual sit
+    inside the island because the cross-layer stream carries layer l's tail
+    combine slice into layer l+1's prologue (``fusco.pipe_layer_stream``);
+    a per-layer island boundary would reinstate exactly the barrier this
+    removes.  With ``stream=False`` (or a non-pipelined engine) the same
+    island runs the per-layer-barrier fallback, which is still one island
+    per block instead of one per layer.
+    """
+    ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
+    ep_axes = tuple(ep_axes)
+    x_spec = P(data_axes, ep_axes, None)
+    if fsdp:
+        # ZeRO-3 expert weights (as in moe_block): stored sharded over the
+        # data axis, gathered just-in-time inside the island
+        w_spec = P(None, ep_axes, None, None, "data")
+        w2_spec = P(None, ep_axes, None, "data", None)
+    else:
+        w_spec = w2_spec = P(None, ep_axes, None, None, None)
+    r_spec = P(None, None, None)
+    ln_spec = P(None, None)
+
+    def inner(xl, wr, w1, w3, w2, lnl):
+        if fsdp:
+            w1 = jax.lax.all_gather(w1, "data", axis=4, tiled=True)
+            w3 = jax.lax.all_gather(w3, "data", axis=4, tiled=True)
+            w2 = jax.lax.all_gather(w2, "data", axis=3, tiled=True)
+        b, s, d = xl.shape
+        n = wr.shape[0]
+        f = w1.shape[-1]
+        xt = xl.reshape(b * s, d)
+        y = fusco.layer_stream(
+            xt, wr, w1.reshape(n, -1, d, f), w3.reshape(n, -1, d, f),
+            w2.reshape(n, -1, f, d), placement, dcfg, top_k,
+            ln=lnl if ln is not None else None, norm_topk=norm_topk,
+            stream=stream)
+        return y.reshape(b, s, d)
+
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, ln_spec),
+                   out_specs=x_spec, check_vma=False)
+    lnl = ln if ln is not None else jnp.zeros(
+        (moe_params["router"].shape[0], x.shape[-1]), x.dtype)
+    return fn(x, moe_params["router"], moe_params["w1"], moe_params["w3"],
+              moe_params["w2"], lnl)
 
 
 def lane_major_expert_weights(w_all: jax.Array, placement: ExpertPlacement) -> jax.Array:

@@ -28,7 +28,7 @@ from repro.layers import attention as attn_lib
 from repro.layers.attention import KVCache, attention_block, cache_update, decode_attention
 from repro.layers.common import dense_init, embed_init, rms_norm, apply_rope, apply_mrope
 from repro.layers.hybrid import hymba_mixer
-from repro.layers.moe import moe_block
+from repro.layers.moe import moe_block, stream_moe_layers
 from repro.layers.ssm import SsmState, mamba2_mixer
 
 
@@ -48,6 +48,10 @@ class ModelContext:
     loss_chunk: int = 512
     explicit_tp: bool = True
     fsdp_experts: bool = False
+    # moe_ffn family: layers per cross-layer stream block (fused_pipe engine
+    # overlaps the combine of layer i with the dispatch of layer i+1 inside
+    # a block); <=1 keeps per-layer islands.
+    moe_stream: int = 0
 
     def tp_eligible(self):
         """Explicit Megatron-TP blocks need head-divisible archs, plain RoPE,
@@ -60,13 +64,13 @@ class ModelContext:
 
     @property
     def data_axes(self):
-        if self.multi_pod and self.cfg.family != "moe":
+        if self.multi_pod and self.cfg.family not in ("moe", "moe_ffn"):
             return ("pod", "data")
         return ("data",)
 
     @property
     def sp_axes(self):
-        if self.multi_pod and self.cfg.family == "moe":
+        if self.multi_pod and self.cfg.family in ("moe", "moe_ffn"):
             return ("pod", "model")
         return ("model",)
 
@@ -100,7 +104,8 @@ class ModelContext:
 def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
                  engine: str = "fused_flat", capacity_factor: float = 2.0,
                  use_balancer: bool = True, node_size: int | None = None,
-                 remat: bool = True) -> ModelContext:
+                 remat: bool = True, moe_stream: int = 0,
+                 pipe_slices: int = 0) -> ModelContext:
     placement = dcfg = None
     if cfg.moe is not None:
         axes = dict(mesh.shape)
@@ -110,14 +115,16 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
         placement = ExpertPlacement(n_experts=cfg.moe.n_experts, ep=ep, node_size=ns)
         dcfg = DcommConfig(engine=engine, ep_axis=ep_axis, node_size=ns,
                            capacity_factor=capacity_factor,
-                           use_balancer=use_balancer)
+                           use_balancer=use_balancer,
+                           pipe_slices=pipe_slices)
     fsdp = False
     if cfg.moe is not None:
         per_lane_gb = (max(1, placement.experts_per_lane) * 3 * cfg.d_model
                        * cfg.moe.d_ff_expert * 2 * cfg.n_layers) / 1e9
         fsdp = per_lane_gb > 4.0       # ZeRO-3 the expert weights when large
     return ModelContext(cfg=cfg, mesh=mesh, multi_pod=multi_pod, dcfg=dcfg,
-                        placement=placement, remat=remat, fsdp_experts=fsdp)
+                        placement=placement, remat=remat, fsdp_experts=fsdp,
+                        moe_stream=moe_stream)
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +192,7 @@ def init_params(cfg: ArchConfig, key, ctx: ModelContext, dtype=jnp.bfloat16):
         layers["ln2"] = jnp.ones((L, d), dtype)
     if cfg.family in ("dense", "vlm", "hybrid"):
         layers["mlp"] = _mlp_params(ks[1], d, cfg.d_ff, L, dtype)
-    if cfg.family == "moe":
+    if cfg.family in ("moe", "moe_ffn"):
         layers["moe"] = _moe_params(ks[2], cfg, ctx.placement, L, dtype)
     if cfg.family in ("ssm", "hybrid"):
         layers["ssm"] = _ssm_params(ks[3], cfg, L, dtype)
@@ -265,6 +272,36 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext):
     h = ctx.constrain(h)
 
     ssm_args = _ssm_args(cfg) if cfg.ssm else None
+
+    if cfg.family == "moe_ffn":
+        # pure MoE-FFN stack: layers grouped into cross-layer stream blocks —
+        # one shard_map island per block instead of one per layer, so inside
+        # a block the combine of layer i overlaps the dispatch of layer i+1
+        # (fused_pipe engine; other engines run the same island per-layer).
+        L = cfg.n_layers
+        blk = max(1, ctx.moe_stream)
+        if L % blk != 0:
+            raise ValueError(
+                f"moe_stream={ctx.moe_stream} must divide n_layers={L} "
+                "(every stream block needs the same static slice geometry)")
+        blocks = jax.tree.map(
+            lambda a: a.reshape((L // blk, blk) + a.shape[1:]),
+            params["layers"])
+
+        def block_fn(h, bp):
+            bp = jax.tree.map(lambda x: x.astype(cd)
+                              if x.dtype in (jnp.float32, jnp.bfloat16) else x,
+                              bp)
+            h = stream_moe_layers(
+                h, bp["moe"], bp["ln1"], mesh=ctx.mesh,
+                placement=ctx.placement, dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
+                data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk,
+                fsdp=ctx.fsdp_experts)
+            return ctx.constrain(h), None
+
+        body = jax.checkpoint(block_fn) if ctx.remat else block_fn
+        h, _ = jax.lax.scan(body, h, blocks)
+        return rms_norm(h, params["final_norm"].astype(cd))
 
     def layer_fn(h, lp, is_global=False):
         lp = jax.tree.map(lambda x: x.astype(cd)
@@ -501,6 +538,9 @@ def decode_step(params, state: DecodeState, inputs, ctx: ModelContext,
                 y = jax.nn.silu(x @ lp["mlp"]["w_gate"]) * (x @ lp["mlp"]["w_up"])
                 y = y @ lp["mlp"]["w_down"]
             h = h + y
+        elif cfg.family == "moe_ffn":
+            x = rms_norm(h, lp["ln1"])
+            h = h + _moe_decode_block(x, lp["moe"], ctx)
         elif cfg.family == "ssm":
             x = rms_norm(h, lp["ln1"])
             st = SsmState(ssm_l["state"], ssm_l["conv"])
@@ -547,6 +587,12 @@ def prefill(params, inputs, positions, ctx: ModelContext, max_len: int):
     archs (recompute-free: k/v are emitted as scan ys)."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
+    if cfg.family == "moe_ffn":
+        # stateless stack: prefill is just the forward (stream blocks incl.)
+        h = forward_hidden(params, inputs, positions, ctx)
+        logits = (h[:, -1] @ params["lm_head"].astype(cd)).astype(jnp.float32)
+        return logits, DecodeState(None, None,
+                                   jnp.array(h.shape[1], jnp.int32))
     if inputs.ndim == 2:
         h = params["embed"].astype(cd)[inputs]
     else:

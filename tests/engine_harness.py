@@ -25,8 +25,14 @@ def conformance_spec(engine: str, *, mesh=(("model", 8),), node_sizes=(2, 4),
                      d: int = 32, f: int = 48, caps_exact=(8.0,),
                      caps_pressure=(0.5,), balancers=(True, False),
                      engine_kwargs_grid=({},), tol: float = 1e-3,
-                     seed: int = 0) -> dict:
-    """Build a spec dict; defaults cover the standard single-pod 8-lane grid."""
+                     dtype: str = "float32", seed: int = 0) -> dict:
+    """Build a spec dict; defaults cover the standard single-pod 8-lane grid.
+
+    ``dtype`` names the input/weight dtype ("float32" or "bfloat16"); bf16
+    rows should come with a correspondingly looser ``tol`` (the oracle runs
+    at the same precision, but rounding orders differ between the engines'
+    scatter-add and the per-token dense sum).
+    """
     return {
         "engine": engine,
         "mesh": [list(ax) for ax in mesh],
@@ -37,33 +43,39 @@ def conformance_spec(engine: str, *, mesh=(("model", 8),), node_sizes=(2, 4),
         "caps_pressure": list(caps_pressure),
         "balancers": list(balancers),
         "engine_kwargs_grid": [dict(kw) for kw in engine_kwargs_grid],
-        "tol": tol, "seed": seed,
+        "tol": tol, "dtype": dtype, "seed": seed,
     }
+
+
+def stream_spec(*, n_layers: int = 2, stream: bool = True, **kw) -> dict:
+    """A conformance spec for the cross-layer layer-stream path: same grid
+    axes, checked against the stacked ``fusco.stream_dense_reference`` oracle
+    (``n_layers`` chained residual MoE layers).  ``stream=False`` runs the
+    per-layer-barrier fallback of ``fusco.layer_stream`` instead — both must
+    match the same oracle."""
+    spec = conformance_spec(kw.pop("engine", "fused_pipe"), **kw)
+    spec["n_layers"] = n_layers
+    spec["stream"] = bool(stream)
+    return spec
 
 
 def driver_code(spec: dict) -> str:
     """Snippet for conftest.run_devices: runs the spec in the subprocess."""
+    fn = "run_stream_conformance" if "n_layers" in spec else "run_conformance"
     return ("import engine_harness\n"
-            f"engine_harness.run_conformance({json.dumps(spec)!r})\n")
+            f"engine_harness.{fn}({json.dumps(spec)!r})\n")
 
 
-def run_conformance(spec) -> None:
-    """Execute a conformance spec against the dense oracle (subprocess side)."""
-    import itertools
-
+def _spec_env(spec):
+    """Shared subprocess-side setup: mesh, EP topology and random weights."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
 
-    from repro.compat import make_mesh, shard_map
-    from repro.core import fusco
-    from repro.core.dcomm import DcommConfig
-    from repro.core.routing import ExpertPlacement
-    from repro.layers.moe import lane_major_expert_weights
+    from repro.compat import make_mesh
+    from jax.sharding import PartitionSpec as P
 
     if isinstance(spec, str):
         spec = json.loads(spec)
-
     axes = [(str(name), int(size)) for name, size in spec["mesh"]]
     mesh = make_mesh(tuple(s for _, s in axes), tuple(n for n, _ in axes))
     ep = 1
@@ -74,12 +86,56 @@ def run_conformance(spec) -> None:
 
     e, k = spec["n_experts"], spec["top_k"]
     t, d, f = spec["t_per_lane"], spec["d"], spec["f"]
+    dtype = getattr(jnp, spec.get("dtype", "float32"))
+    n_layers = spec.get("n_layers", 0)
+    nw = max(1, n_layers)
     ks = jax.random.split(jax.random.PRNGKey(spec["seed"]), 5)
-    x = jax.random.normal(ks[0], (ep * t, d))
-    wr = jax.random.normal(ks[1], (d, e)) * 0.5
-    w1 = jax.random.normal(ks[2], (e, d, f)) * 0.1
-    w3 = jax.random.normal(ks[3], (e, d, f)) * 0.1
-    w2 = jax.random.normal(ks[4], (e, f, d)) * 0.1
+    x = jax.random.normal(ks[0], (ep * t, d)).astype(dtype)
+    wr = (jax.random.normal(ks[1], (nw, d, e)) * 0.5).astype(dtype)
+    w1 = (jax.random.normal(ks[2], (nw, e, d, f)) * 0.1).astype(dtype)
+    w3 = (jax.random.normal(ks[3], (nw, e, d, f)) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(ks[4], (nw, e, f, d)) * 0.1).astype(dtype)
+    if n_layers == 0:
+        wr, w1, w3, w2 = wr[0], w1[0], w3[0], w2[0]
+    return spec, mesh, ep, ep_axis, ep_spec, (x, wr, w1, w3, w2)
+
+
+def _grid_cells(spec):
+    """The common conformance grid: one cell per (node_size, balancer,
+    engine-kwargs, capacity_factor, exactness).  ``exact`` cells compare
+    against the oracle within tol; pressure cells only require finiteness
+    (capacity overflow drops tokens by design)."""
+    import itertools
+    caps = ([(c, True) for c in spec["caps_exact"]]
+            + [(c, False) for c in spec["caps_pressure"]])
+    return itertools.product(spec["node_sizes"], spec["balancers"],
+                             spec["engine_kwargs_grid"], caps)
+
+
+def _check_cell(y, ref, spec, exact, key):
+    import jax.numpy as jnp
+    if exact:
+        err = float(jnp.max(jnp.abs(y - ref)))
+        assert err < spec["tol"], key + (err,)
+    else:
+        assert bool(jnp.all(jnp.isfinite(y))), key
+
+
+def run_conformance(spec) -> None:
+    """Execute a conformance spec against the dense oracle (subprocess side)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import fusco
+    from repro.core.dcomm import DcommConfig
+    from repro.core.routing import ExpertPlacement
+    from repro.layers.moe import lane_major_expert_weights
+
+    spec, mesh, ep, ep_axis, ep_spec, arrs = _spec_env(spec)
+    x, wr, w1, w3, w2 = arrs
+    e, k = spec["n_experts"], spec["top_k"]
+    t, d, f = spec["t_per_lane"], spec["d"], spec["f"]
     ref = fusco.dense_moe_reference(x, wr, w1, w3, w2, k)
 
     def run(cfg, placement, w1l, w3l, w2l):
@@ -90,29 +146,75 @@ def run_conformance(spec) -> None:
                       out_specs=ep_spec, check_vma=False)
         return jax.jit(g)(x, wr, w1l, w3l, w2l)
 
-    grid = itertools.product(spec["node_sizes"], spec["balancers"],
-                             spec["engine_kwargs_grid"])
     n_cells = 0
-    for node_size, balancer, ekw in grid:
+    for node_size, balancer, ekw, (cap, exact) in _grid_cells(spec):
         placement = ExpertPlacement(n_experts=e, ep=ep, node_size=node_size)
         w1l = lane_major_expert_weights(w1, placement).reshape(-1, d, f)
         w3l = lane_major_expert_weights(w3, placement).reshape(-1, d, f)
         w2l = lane_major_expert_weights(w2, placement).reshape(-1, f, d)
-        for cap in spec["caps_exact"]:
-            cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
-                              node_size=node_size, capacity_factor=cap,
-                              use_balancer=balancer, **ekw)
-            y = run(cfg, placement, w1l, w3l, w2l)
-            err = float(jnp.max(jnp.abs(y - ref)))
-            assert err < spec["tol"], (
-                spec["engine"], node_size, balancer, ekw, cap, err)
-            n_cells += 1
-        for cap in spec["caps_pressure"]:
-            cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
-                              node_size=node_size, capacity_factor=cap,
-                              use_balancer=balancer, **ekw)
-            y = run(cfg, placement, w1l, w3l, w2l)
-            assert bool(jnp.all(jnp.isfinite(y))), (
-                spec["engine"], node_size, balancer, ekw, cap)
-            n_cells += 1
+        cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
+                          node_size=node_size, capacity_factor=cap,
+                          use_balancer=balancer, **ekw)
+        y = run(cfg, placement, w1l, w3l, w2l)
+        _check_cell(y, ref, spec, exact,
+                    (spec["engine"], node_size, balancer, ekw, cap))
+        n_cells += 1
     print(OK_TOKEN, spec["engine"], n_cells)
+
+
+def run_stream_conformance(spec) -> None:
+    """Execute a layer-stream spec against the stacked dense oracle.
+
+    Runs ``fusco.layer_stream`` (cross-layer pipelined schedule when
+    ``spec["stream"]``, else the per-layer-barrier fallback) over
+    ``n_layers`` chained residual MoE layers inside one shard_map island and
+    checks it against ``fusco.stream_dense_reference``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import fusco
+    from repro.core.dcomm import DcommConfig
+    from repro.core.routing import ExpertPlacement
+    from repro.layers.moe import lane_major_expert_weights
+
+    spec, mesh, ep, ep_axis, ep_spec, arrs = _spec_env(spec)
+    x, wr, w1, w3, w2 = arrs
+    e, k = spec["n_experts"], spec["top_k"]
+    d, f = spec["d"], spec["f"]
+    n_layers, stream = spec["n_layers"], spec["stream"]
+    ref = fusco.stream_dense_reference(x, wr, w1, w3, w2, k)
+    w_spec = P(None, *ep_spec)                       # (N, EP_lanes*El, ., .)
+
+    def run(cfg, placement, w1l, w3l, w2l):
+        el = placement.experts_per_lane
+
+        def fn(x, wr, a, b, c):
+            return fusco.layer_stream(
+                x, wr, a.reshape(n_layers, el, d, f),
+                b.reshape(n_layers, el, d, f), c.reshape(n_layers, el, f, d),
+                placement, cfg, k, stream=stream)
+        g = shard_map(fn, mesh=mesh,
+                      in_specs=(ep_spec, P(), w_spec, w_spec, w_spec),
+                      out_specs=ep_spec, check_vma=False)
+        return jax.jit(g)(x, wr, w1l, w3l, w2l)
+
+    n_cells = 0
+    for node_size, balancer, ekw, (cap, exact) in _grid_cells(spec):
+        placement = ExpertPlacement(n_experts=e, ep=ep, node_size=node_size)
+        w1l = jnp.stack([lane_major_expert_weights(w1[l], placement)
+                         .reshape(-1, d, f) for l in range(n_layers)])
+        w3l = jnp.stack([lane_major_expert_weights(w3[l], placement)
+                         .reshape(-1, d, f) for l in range(n_layers)])
+        w2l = jnp.stack([lane_major_expert_weights(w2[l], placement)
+                         .reshape(-1, f, d) for l in range(n_layers)])
+        cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
+                          node_size=node_size, capacity_factor=cap,
+                          use_balancer=balancer, **ekw)
+        y = run(cfg, placement, w1l, w3l, w2l)
+        _check_cell(y, ref, spec, exact,
+                    ("stream", node_size, balancer, ekw, cap))
+        n_cells += 1
+    print(OK_TOKEN, "layer_stream", n_cells)

@@ -1,4 +1,5 @@
-"""Ragged-engine descriptor construction (structural) + pipeline simulator."""
+"""Ragged-engine descriptor construction/inversion (structural) + pipeline
+simulator (per-shuffle and cross-layer stream)."""
 
 import jax
 import jax.numpy as jnp
@@ -8,9 +9,11 @@ try:
 except ImportError:  # deterministic fallback so the suite still runs
     from _hypothesis_compat import given, settings, st
 
-from repro.core.dcomm import build_ragged_descriptors
+from repro.core.dcomm import (build_ragged_descriptors,
+                              ragged_reverse_descriptors)
 from repro.core.planner import build_flat_plan
-from repro.core.pipesim import PipeParams, best_slice, plan_slices, simulate
+from repro.core.pipesim import (PipeParams, best_slice, plan_layer_stream,
+                                plan_slices, simulate, simulate_layer_stream)
 from repro.core.routing import ExpertPlacement
 
 
@@ -25,15 +28,21 @@ def test_ragged_descriptors_structural(seed, k):
     gates = jnp.ones((t, k)) / k
     cap = 16
     plan = build_flat_plan(A, gates, placement, cap)
-    compact, offs, sizes = build_ragged_descriptors(plan, placement, cap)
-    compact, offs, sizes = map(np.asarray, (compact, offs, sizes))
+    desc = build_ragged_descriptors(plan, placement, cap)
+    compact, offs, sizes = map(np.asarray, (desc.compact_src,
+                                            desc.input_offsets,
+                                            desc.send_sizes))
+    cgate = np.asarray(desc.compact_gate)
     slot_src = np.asarray(plan.src_of_slot)
+    slot_gate = np.asarray(plan.gate_of_slot)
 
     occupied = slot_src[slot_src >= 0]
     n_occ = len(occupied)
-    # 1. compact prefix == occupied rows in slot order
+    # 1. compact prefix == occupied rows in slot order (src AND gates aligned)
     np.testing.assert_array_equal(compact[:n_occ], occupied)
     assert (compact[n_occ:] == -1).all()
+    np.testing.assert_array_equal(cgate[:n_occ], slot_gate[slot_src >= 0])
+    assert (cgate[n_occ:] == 0).all()
     # 2. sizes sum to occupied rows; offsets are their prefix sums
     assert sizes.sum() == n_occ
     np.testing.assert_array_equal(offs, np.concatenate([[0], np.cumsum(sizes)[:-1]]))
@@ -44,6 +53,72 @@ def test_ragged_descriptors_structural(seed, k):
         lane_slots = slot_src[lane * e_local * c:(lane + 1) * e_local * c]
         np.testing.assert_array_equal(compact[lo:hi],
                                       lane_slots[lane_slots >= 0])
+
+
+def _ragged_a2a_ref(send_bufs, in_offs, send_sizes, out_bufs, out_offs,
+                    recv_sizes):
+    """NumPy reference of jax.lax.ragged_all_to_all over a list of lanes."""
+    ep = len(send_bufs)
+    out = [b.copy() for b in out_bufs]
+    for p in range(ep):
+        for q in range(ep):
+            n = int(send_sizes[p][q])
+            src = send_bufs[p][int(in_offs[p][q]):int(in_offs[p][q]) + n]
+            dst0 = int(out_offs[p][q])
+            out[q][dst0:dst0 + n] = src
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000), st.integers(1, 4))
+def test_ragged_combine_descriptor_inversion(seed, k):
+    """Forward ragged exchange + the inverted reverse exchange is the
+    identity on every occupied compact row — the structural core of
+    ``dcomm.ragged_combine``, emulated lane-by-lane in NumPy (the real op is
+    TPU-only)."""
+    ep, e, cap, t = 4, 8, 16, 24
+    placement = ExpertPlacement(n_experts=e, ep=ep, node_size=2)
+    rng = np.random.default_rng(seed)
+
+    descs, send_bufs = [], []
+    for lane in range(ep):
+        A = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+        gates = jnp.ones((t, k)) / k
+        plan = build_flat_plan(A, gates, placement, cap)
+        d = build_ragged_descriptors(plan, placement, cap)
+        descs.append(jax.tree.map(np.asarray, d))
+        buf = np.where(np.asarray(d.compact_src)[:, None] >= 0,
+                       rng.normal(size=(d.compact_src.shape[0], 3)), 0.0)
+        send_bufs.append(buf)
+
+    in_offs = [d.input_offsets for d in descs]
+    send_sizes = [d.send_sizes for d in descs]
+    # the runtime exchanges: recv_sizes = a2a(send_sizes), out_offs =
+    # a2a(recv cumulative layout), peer_offs = a2a(input_offsets)
+    recv_sizes = [np.array([send_sizes[p][q] for p in range(ep)])
+                  for q in range(ep)]
+    recv_offs = [np.concatenate([[0], np.cumsum(rs)[:-1]]).astype(np.int64)
+                 for rs in recv_sizes]
+    out_offs = [np.array([recv_offs[q][p] for q in range(ep)])
+                for p in range(ep)]
+    peer_offs = [np.array([in_offs[q][p] for q in range(ep)])
+                 for p in range(ep)]
+
+    landed = _ragged_a2a_ref(send_bufs, in_offs, send_sizes,
+                             [np.zeros_like(b) for b in send_bufs],
+                             out_offs, recv_sizes)
+
+    # reverse direction, per lane, through the real inversion helper
+    rev = [ragged_reverse_descriptors(in_offs[q], send_sizes[q],
+                                      recv_offs[q], recv_sizes[q],
+                                      peer_offs[q]) for q in range(ep)]
+    back = _ragged_a2a_ref(landed,
+                           [r[0] for r in rev], [r[1] for r in rev],
+                           [np.zeros_like(b) for b in send_bufs],
+                           [r[2] for r in rev], [r[3] for r in rev])
+    for lane in range(ep):
+        occ = descs[lane].compact_src >= 0
+        np.testing.assert_allclose(back[lane][occ], send_bufs[lane][occ])
 
 
 def test_pipesim_wire_bound_and_overhead():
@@ -122,6 +197,46 @@ def test_best_slice_is_feasible_knee():
     for s in (b["slice_bytes"] / 2, b["slice_bytes"] * 2):
         if 4096 <= s <= 2 ** 26:
             assert simulate(p, s)["efficiency"] <= b["efficiency"] + 1e-9
+
+
+# ---- cross-layer stream model (combine of layer i overlaps dispatch i+1) ---
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_layer_stream_never_slower_than_barriered(payload_mb, n_layers):
+    p = PipeParams(payload_bytes=payload_mb * 1e6)
+    r = simulate_layer_stream(p, 1 << 20, n_layers)
+    assert r["total_s"] <= r["barriered_s"] + 1e-12
+    assert r["speedup_vs_barriered"] >= 1.0
+    # the hidden window per boundary is bounded by both resources
+    stage_t = (1 << 20) / p.stage_bw + p.per_slice_overhead_s
+    wire_t = (1 << 20) / p.wire_bw
+    assert r["overlap_per_boundary_s"] <= min(stage_t, wire_t) + 1e-15
+    # a single layer has no boundary to hide
+    one = simulate_layer_stream(p, 1 << 20, 1)
+    assert abs(one["total_s"] - one["barriered_s"]) < 1e-15
+    assert abs(one["total_s"] - simulate(p, 1 << 20)["total_s"]) < 1e-15
+
+
+def test_layer_stream_speedup_monotone_in_depth():
+    p = PipeParams(payload_bytes=32e6)
+    speedups = [simulate_layer_stream(p, 1 << 20, n)["speedup_vs_barriered"]
+                for n in (1, 2, 4, 8)]
+    assert all(b >= a - 1e-12 for a, b in zip(speedups, speedups[1:]))
+    assert speedups[0] == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 128), st.integers(2, 6))
+def test_plan_layer_stream_covers_payload(payload_mb, n_layers):
+    payload = payload_mb * 1e6
+    plan = plan_layer_stream(PipeParams(payload_bytes=1.0), n_layers,
+                             payload_bytes=payload)
+    assert plan["n_slices"] >= 1
+    assert plan["n_slices"] * plan["slice_bytes"] >= payload
+    capped = plan_layer_stream(PipeParams(payload_bytes=1.0), n_layers,
+                               payload_bytes=payload, max_slices=3)
+    assert 1 <= capped["n_slices"] <= 3
 
 
 @settings(max_examples=20, deadline=None)
