@@ -1,9 +1,15 @@
 """Paper Table 3 — component ablations under the three traffic patterns.
 
-  FUSCO        = fused_hier, balancer on
-  dComm-off    = disagg (explicit rearrangement passes around the collective)
-  Planner-off  = fused_flat (fusion kept, NO hierarchical dedup/forwarding)
-  Balancer-off = fused_hier with the static same-local-index grouping
+  FUSCO         = fused_hier, balancer fed by measured (EMA) lane-send loads
+                  — Algorithm 1 on real traffic, as the training path now
+                  runs it (moe_block threads traffic stats every step)
+  dComm-off     = disagg (explicit rearrangement passes around the collective)
+  Planner-off   = fused_flat (fusion kept, NO hierarchical dedup/forwarding)
+  Balancer-off  = fused_hier with the static same-local-index grouping (§5.4)
+  Balancer-cold = fused_hier, Algorithm 1 fed an all-zero (cold-start) state
+                  — a valid but load-blind rotated grouping, so the
+                  fusco-vs-balancer_cold delta isolates what *measured* loads
+                  buy over merely running the algorithm.
 """
 
 from __future__ import annotations
@@ -11,33 +17,42 @@ from __future__ import annotations
 from benchmarks.common import PREAMBLE, run_sub
 
 CODE = PREAMBLE + """
-T = 1024
+T = __T__
 results = {}
 for pattern in ["real_world", "single_node", "imbalanced"]:
     x, A, g, w1, w3, w2 = inputs(pattern, T)
+    # measure the pattern's traffic once (online stats), feed Algorithm 1
+    st = traffic_lib.init_traffic_state(E, EP)
+    st = traffic_lib.observe(st, A, placement, jnp.arange(EP * T) // T,
+                             decay=0.5)
+    ema_assignment = balancer.algorithm1_groups(
+        traffic_lib.balancer_loads(st, placement))
+    cold_assignment = balancer.algorithm1_groups(traffic_lib.balancer_loads(
+        traffic_lib.init_traffic_state(E, EP), placement))
     variants = {
-        "fusco": ("fused_hier", True),
-        "dcomm_off": ("disagg", True),
-        "planner_off": ("fused_flat", True),
-        "balancer_off": ("fused_hier", False),
+        "fusco": ("fused_hier", True, ema_assignment),
+        "dcomm_off": ("disagg", True, None),
+        "planner_off": ("fused_flat", True, None),
+        "balancer_off": ("fused_hier", False, None),
+        "balancer_cold": ("fused_hier", True, cold_assignment),
     }
     row = {}
-    for name, (engine, bal) in variants.items():
-        f = jax.jit(engine_fn(engine, T, balancer=bal))
+    for name, (engine, bal, asg) in variants.items():
+        f = jax.jit(engine_fn(engine, T, balancer=bal, assignment=asg))
         row[name] = timeit(f, x, A, g, w1, w3, w2)
     results[pattern] = row
 print(json.dumps(results))
 """
 
 
-def run() -> list[tuple[str, float, str]]:
-    res = run_sub(CODE, timeout=1800)
+def run(t: int = 1024) -> list[tuple[str, float, str]]:
+    res = run_sub(CODE.replace("__T__", str(t)), timeout=1800)
     rows = []
     for pattern, r in res.items():
         base = r["fusco"]
-        for name, t in r.items():
-            rows.append((f"ablation/{pattern}/{name}", t * 1e6, ""))
+        for name, t_ in r.items():
+            rows.append((f"ablation/{pattern}/{name}", t_ * 1e6, ""))
             if name != "fusco":
                 rows.append((f"ablation/{pattern}/{name}_degradation",
-                             (t - base) / t * 100.0, "%"))
+                             (t_ - base) / t_ * 100.0, "%"))
     return rows

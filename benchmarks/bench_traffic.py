@@ -4,6 +4,14 @@ Stage breakdown (Fig. 7 bars): preprocessing = planner descriptor
 construction alone; rearrangement = the disaggregated engine's extra
 sort/pack passes (fused engines: 0 by construction); communication+compute =
 remainder of the full pipeline.
+
+Adaptive-placement rows (imbalanced pattern): the online traffic stats
+(``core/traffic.py``) feed the load-adaptive re-layout solver
+(``core/relayout.py``); we report max-lane token load static vs adaptive (the
+structural win — CPU wall times serialize lanes, so the structural metric is
+what transfers to the TPU target), the engine latency under both placements,
+and the weight bytes a relayout would migrate (the cost the replan cadence
+amortizes — DESIGN.md §traffic).
 """
 
 from __future__ import annotations
@@ -11,9 +19,10 @@ from __future__ import annotations
 from benchmarks.common import PREAMBLE, run_sub
 
 CODE = PREAMBLE + """
+SIZES = __SIZES__
 results = {}
 for pattern in ["real_world", "single_node", "imbalanced"]:
-    for T in [256, 1024]:
+    for T in SIZES:
         row = {}
         x, A, g, w1, w3, w2 = inputs(pattern, T)
         for engine in ["disagg", "fused_flat", "fused_hier"]:
@@ -26,13 +35,41 @@ for pattern in ["real_world", "single_node", "imbalanced"]:
                        out_specs=P("model"), check_vma=False)
         row["preprocess"] = timeit(jax.jit(pf), A, g)
         results[f"{pattern}/T{T}"] = row
+
+# --- traffic-adaptive vs static placement (imbalanced pattern) -------------
+T = SIZES[-1]
+x, A, g, w1, w3, w2 = inputs("imbalanced", T)
+st = traffic_lib.init_traffic_state(E, EP)
+src_lane = jnp.arange(EP * T) // T          # x is T-major per lane (P("model"))
+st = traffic_lib.observe(st, A, placement, src_lane, decay=0.5)
+loads = np.asarray(st.expert_ema)
+adaptive = relayout.solve_placement(loads, ep=EP, node_size=NODE,
+                                    slots_per_lane=E // EP)
+row = {
+    "maxlane_static": float(relayout.lane_loads(loads, placement).max()),
+    "maxlane_adaptive": float(relayout.lane_loads(loads, adaptive).max()),
+    "bytes_moved": relayout.migration_stats(
+        placement, adaptive, row_bytes=(2 * D * F + F * D) * 4)["bytes_moved"],
+}
+w1a = relayout.migrate_lane_major(
+    w1.reshape(EP, -1, D, F), placement, adaptive).reshape(-1, D, F)
+w3a = relayout.migrate_lane_major(
+    w3.reshape(EP, -1, D, F), placement, adaptive).reshape(-1, D, F)
+w2a = relayout.migrate_lane_major(
+    w2.reshape(EP, -1, F, D), placement, adaptive).reshape(-1, F, D)
+fs = jax.jit(engine_fn("fused_flat", T, with_ffn=True))
+fa = jax.jit(engine_fn("fused_flat", T, with_ffn=True, place=adaptive))
+row["static_t"] = timeit(fs, x, A, g, w1, w3, w2)
+row["adaptive_t"] = timeit(fa, x, A, g, w1a, w3a, w2a)
+results["imbalanced/adaptive"] = row
 print(json.dumps(results))
 """
 
 
-def run() -> list[tuple[str, float, str]]:
-    res = run_sub(CODE, timeout=1800)
+def run(sizes=(256, 1024)) -> list[tuple[str, float, str]]:
+    res = run_sub(CODE.replace("__SIZES__", repr(list(sizes))), timeout=1800)
     rows = []
+    adaptive = res.pop("imbalanced/adaptive")
     for key, r in res.items():
         for eng in ("disagg", "fused_flat", "fused_hier"):
             rows.append((f"traffic/{key}/{eng}", r[eng] * 1e6, ""))
@@ -41,4 +78,17 @@ def run() -> list[tuple[str, float, str]]:
                      r["disagg"] / r["fused_flat"], "x"))
         rows.append((f"traffic/{key}/speedup_hier_vs_disagg",
                      r["disagg"] / r["fused_hier"], "x"))
+    rows.append(("traffic/imbalanced/maxlane_static",
+                 adaptive["maxlane_static"], "tokens"))
+    rows.append(("traffic/imbalanced/maxlane_adaptive",
+                 adaptive["maxlane_adaptive"], "tokens"))
+    rows.append(("traffic/imbalanced/maxlane_reduction",
+                 adaptive["maxlane_static"] / adaptive["maxlane_adaptive"],
+                 "x"))
+    rows.append(("traffic/imbalanced/static_placement",
+                 adaptive["static_t"] * 1e6, ""))
+    rows.append(("traffic/imbalanced/adaptive_placement",
+                 adaptive["adaptive_t"] * 1e6, ""))
+    rows.append(("traffic/imbalanced/relayout_bytes_moved",
+                 adaptive["bytes_moved"], "B"))
     return rows

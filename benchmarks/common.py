@@ -38,7 +38,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import make_mesh, shard_map
 from repro.core.routing import ExpertPlacement
 from repro.core.dcomm import DcommConfig
-from repro.core import fusco, planner, dcomm
+from repro.core import (fusco, planner, dcomm, relayout, balancer,
+                        traffic as traffic_lib)
 
 EP, NODE = 8, 4            # 2 nodes x 4 lanes (virtual-node hierarchy)
 E, K, D, F = 32, 8, 256, 128
@@ -72,18 +73,23 @@ def make_traffic(pattern, T, seed=0):
 mesh = make_mesh((EP,), ("model",))
 placement = ExpertPlacement(n_experts=E, ep=EP, node_size=NODE)
 
-def engine_fn(engine, T, balancer=True, cap=2.0, with_ffn=False, **ekw):
+def engine_fn(engine, T, balancer=True, cap=2.0, with_ffn=False, place=None,
+              assignment=None, **ekw):
     # with_ffn=False == the paper's communication benchmark (S5.2): the
     # shuffle pipeline only, expert compute excluded.  with_ffn=True routes
     # through fusco.shuffle_ffn, so fused_pipe runs its fully fused sliced
     # pipeline (FFN overlapping the wire) rather than split dispatch/combine.
+    # place: alternate placement (e.g. a traffic-adaptive relayout table);
+    # assignment: balancer group table (e.g. algorithm1 on measured loads).
+    place = placement if place is None else place
     cfg = DcommConfig(engine=engine, ep_axis="model", node_size=NODE,
                       capacity_factor=cap, use_balancer=balancer, **ekw)
     def fn(x, A, g, w1, w3, w2):
         if with_ffn:
-            return fusco.shuffle_ffn(x, A, g, w1, w3, w2, placement, cfg)
-        res = fusco.dispatch(x, A, g, placement, cfg)
-        return fusco.combine(res.expert_rows, res, placement, cfg, g)
+            return fusco.shuffle_ffn(x, A, g, w1, w3, w2, place, cfg,
+                                     assignment)
+        res = fusco.dispatch(x, A, g, place, cfg, assignment)
+        return fusco.combine(res.expert_rows, res, place, cfg, g)
     return shard_map(fn, mesh=mesh,
                      in_specs=(P("model"), P("model"), P("model"),
                                P("model"), P("model"), P("model")),

@@ -15,7 +15,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: traffic,ablation,breakdown,e2e")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated token counts per lane for the "
+                         "suites that take sizes (traffic, ablation) — "
+                         "e.g. --sizes 64 for the CI smoke run")
     args = ap.parse_args()
+    sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes else None)
 
     from benchmarks import (bench_ablation, bench_breakdown, bench_e2e,
                             bench_pipeline, bench_traffic)
@@ -34,7 +39,13 @@ def main() -> None:
     failures = 0
     for name, mod in suites.items():
         try:
-            for row_name, value, unit in mod.run():
+            if sizes is not None and name == "traffic":
+                rows = mod.run(sizes=tuple(sizes))
+            elif sizes is not None and name == "ablation":
+                rows = mod.run(t=sizes[-1])
+            else:
+                rows = mod.run()
+            for row_name, value, unit in rows:
                 print(f"{row_name},{value:.2f},{unit}")
         except Exception:
             failures += 1

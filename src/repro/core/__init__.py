@@ -8,9 +8,12 @@ Public surface:
   dcomm        — the Data-Fused Communication Engine (5 wire engines)
   fusco        — drop-in MoE shuffle+FFN API and the dense oracle
   pipesim      — discrete-event slice-pipeline model (feeds fused_pipe)
+  traffic      — online EMA traffic statistics (expert + lane-send loads)
+  relayout     — table-driven placement + load-adaptive re-layout solver
 """
 
 from repro.core.dcomm import DcommConfig  # noqa: F401
 from repro.core.routing import ExpertPlacement  # noqa: F401
+from repro.core.relayout import TablePlacement  # noqa: F401
 from repro.core.fusco import (moe_shuffle_ffn, shuffle_ffn,  # noqa: F401
                               dense_moe_reference)

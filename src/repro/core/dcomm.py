@@ -63,6 +63,19 @@ ragged        1          none       no          ``jax.lax.ragged_all_to_all`` wh
 ============  =========  =========  ==========  =====================================
 
 All entry points run **inside shard_map** over the expert-parallel axis/axes.
+
+Placement: every engine is placement-agnostic — it only consumes the
+placement *interface* (``ep`` / ``node_size`` / ``experts_per_lane`` /
+``lane_of_expert`` / ``local_expert_index`` / ``node_of_lane`` /
+``replica_count``), so both the arithmetic ``routing.ExpertPlacement`` and
+the table-driven ``relayout.TablePlacement`` (arbitrary expert→lane tables
+with per-expert replica counts, produced by the load-adaptive re-layout
+solver from ``traffic.py`` EMA statistics) drive the same descriptors.
+Conformance under arbitrary tables is enforced per engine in
+``tests/test_engines.py``.
+
+Overflow: capacity drops used to be silent (``mode="drop"`` scatters); each
+dispatch now surfaces the shard's drop count as ``DispatchResult.dropped``.
 """
 
 from __future__ import annotations
@@ -130,6 +143,15 @@ class DispatchResult(NamedTuple):
     expert_rows: jax.Array      # (S, E_local, C, d) rows for this lane's experts
     row_gates: jax.Array | None  # (S, E_local, C) gates (hier) or None (flat)
     state: Any                  # engine-private
+    # capacity-overflow drop count observed BY this shard (scalar — drops
+    # were previously silent mode="drop" scatters): sum(max(0, count -
+    # capacity)) over the slot-table groups this shard builds.  For the
+    # single-level engines (flat/pipe/ragged) that is purely this shard's
+    # own sender-side assignments; hier and disagg also count their
+    # forwarder/receiver-stage drops, which concern OTHER shards' tokens —
+    # so per-shard attribution is engine-dependent and only the psum over
+    # the EP axis is globally meaningful.
+    dropped: jax.Array | None = None
 
 
 def _flat_exchange(buf: jax.Array, cfg: DcommConfig, ep: int,
@@ -172,7 +194,7 @@ def flat_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
                          placement.ep)
     # landed layout: (source lane, E_local, C, d) — expert-grouped already.
     expert_rows = buf.reshape(placement.ep, e_local, cap, d)
-    return DispatchResult(expert_rows, None, (plan, t, d, cap))
+    return DispatchResult(expert_rows, None, (plan, t, d, cap), plan.dropped)
 
 
 def flat_combine(expert_out: jax.Array, res: DispatchResult,
@@ -373,13 +395,14 @@ def pipe_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     ``fused_flat`` (the FFN-overlapped path is :func:`pipe_shuffle_ffn`)."""
     t, d = x.shape
     e_local = placement.experts_per_lane
-    _, sliced, cap, s = _pipe_slice_plan(x, A, gates, placement, cfg)
+    plan, sliced, cap, s = _pipe_slice_plan(x, A, gates, placement, cfg)
     landed = jax.lax.map(
         lambda src: pipe_issue(x, src, placement, cfg), sliced.src)
     # (S, EP, E_local, Cs, d) -> (EP, E_local, C, d): slices are capacity stripes
     expert_rows = landed.transpose(1, 2, 0, 3, 4).reshape(
         placement.ep, e_local, cap, d)
-    return DispatchResult(expert_rows, None, (sliced, t, d, cap, s))
+    return DispatchResult(expert_rows, None, (sliced, t, d, cap, s),
+                          plan.dropped)
 
 
 def pipe_combine(expert_out: jax.Array, res: DispatchResult,
@@ -457,8 +480,11 @@ def hier_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
                             axis_index_groups=groups)
     expert_rows = buf2.reshape(ns, e_local, c2, d)
     row_gates = g2.reshape(ns, e_local, c2)
+    # stage-1 drops are sender-local; stage-2 drops happen on the forwarder
+    # after the slow-tier exchange (both were silent before)
     return DispatchResult(expert_rows, row_gates,
-                          (plan1, plan2, t, d, c1, c2, groups))
+                          (plan1, plan2, t, d, c1, c2, groups),
+                          plan1.dropped + plan2.slots.dropped())
 
 
 def hier_combine(expert_out: jax.Array, res: DispatchResult,
@@ -508,7 +534,7 @@ def disagg_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     from repro.core.routing import balanced_replica_choice
     replica = balanced_replica_choice(A, placement)
     lane = placement.lane_of_expert(A, replica).reshape(-1)      # (T*K,)
-    eloc = placement.local_expert_index(A).reshape(-1)
+    eloc = placement.local_expert_index(A, replica).reshape(-1)
     tok = jnp.broadcast_to(jnp.arange(t, dtype=I32)[:, None], A.shape).reshape(-1)
 
     # pass 1: materialised sort-by-destination-rank (the pre-a2a permutation)
@@ -543,7 +569,7 @@ def disagg_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
         jnp.arange(meta_r.shape[0], dtype=I32), mode="drop")
     ebuf = gather_rows(xr, inv2).reshape(1, e_local, cap_e * placement.ep, d)
     state = (order, st, order2, st2, inv2, t, d, k, cap_lane, cap_e)
-    return DispatchResult(ebuf, None, state)
+    return DispatchResult(ebuf, None, state, st.dropped() + st2.dropped())
 
 
 def disagg_combine(expert_out: jax.Array, res: DispatchResult,
@@ -663,7 +689,8 @@ def ragged_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
         send_buf, out_buf, offs, send_sizes, out_offsets, recv_sizes,
         axis_name=cfg.model_axis)
     return DispatchResult(landed.reshape(1, 1, placement.ep * e_local * cap, d),
-                          None, (desc, t, d, cap, recv_offs, recv_sizes))
+                          None, (desc, t, d, cap, recv_offs, recv_sizes),
+                          plan.dropped)
 
 
 def ragged_combine(expert_out: jax.Array, res: DispatchResult,

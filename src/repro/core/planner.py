@@ -37,6 +37,7 @@ class FlatPlan(NamedTuple):
     src_of_slot: jax.Array      # (R,) source token row per buffer row, -1 empty
     gate_of_slot: jax.Array     # (R,) combine weight per buffer row
     lane: jax.Array             # (T, K) destination lane (diagnostics / tests)
+    dropped: jax.Array          # () assignments lost to capacity overflow
 
 
 class SlicedFlatPlan(NamedTuple):
@@ -77,6 +78,7 @@ class HierPlan(NamedTuple):
     meta_expert: jax.Array      # (R1, K) lane_in_node * E_local + e_local, -1 pad
     meta_gate: jax.Array        # (R1, K) gates aligned with meta_expert
     dst_rank_load: jax.Array    # (EP,) rows sent to each rank (balancer input)
+    dropped: jax.Array          # () stage-1 rows lost to capacity overflow
 
 
 def _inverse_slot(slots: SlotTable, values: jax.Array) -> jax.Array:
@@ -89,18 +91,24 @@ def _inverse_slot(slots: SlotTable, values: jax.Array) -> jax.Array:
 
 def build_flat_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
                     capacity: int) -> FlatPlan:
-    """Descriptor construction for the single-level fused engine."""
+    """Descriptor construction for the single-level fused engine.
+
+    ``placement`` may be the arithmetic :class:`ExpertPlacement` or the
+    table-driven ``relayout.TablePlacement`` — the same ``replica_choice``
+    feeds both the lane map and the local-slot map, which is what keeps
+    replicated experts addressable under arbitrary tables.
+    """
     t = A.shape[0]
     replica = balanced_replica_choice(A, placement)
     lane = placement.lane_of_expert(A, replica)                  # (T, K)
-    e_local = placement.local_expert_index(A)                    # (T, K)
+    e_local = placement.local_expert_index(A, replica)           # (T, K)
     key = lane * placement.experts_per_lane + e_local            # (T, K)
     slots = build_slot_table(key, placement.ep * placement.experts_per_lane, capacity)
     token_ids = jnp.broadcast_to(jnp.arange(t, dtype=I32)[:, None], A.shape)
     src_of_slot = _inverse_slot(slots, token_ids)
     gate_of_slot = _inverse_slot(slots, gates)
     gate_of_slot = jnp.where(src_of_slot >= 0, gate_of_slot, 0).astype(gates.dtype)
-    return FlatPlan(slots, src_of_slot, gate_of_slot, lane)
+    return FlatPlan(slots, src_of_slot, gate_of_slot, lane, slots.dropped())
 
 
 def build_hier_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
@@ -116,7 +124,7 @@ def build_hier_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
     n_nodes, ns = placement.n_nodes, placement.node_size
     replica = balanced_replica_choice(A, placement)
     lane = placement.lane_of_expert(A, replica)                  # (T, K)
-    e_local = placement.local_expert_index(A)
+    e_local = placement.local_expert_index(A, replica)
     node = placement.node_of_lane(lane)                          # (T, K) == B matrix
 
     # --- dedup: does token t use node n?  (T, n_nodes) one-hot-of-any ------
@@ -154,7 +162,8 @@ def build_hier_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
         gate_tn.reshape(-1, k), mode="drop")
 
     load = group_counts(key1.reshape(-1), placement.ep)
-    return HierPlan(slots, src_of_slot, meta_expert, meta_gate, load)
+    return HierPlan(slots, src_of_slot, meta_expert, meta_gate, load,
+                    slots.dropped())
 
 
 class Stage2Plan(NamedTuple):

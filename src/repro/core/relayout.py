@@ -1,0 +1,309 @@
+"""Load-adaptive expert re-layout — table-driven placement + greedy solver.
+
+FUSCO's abstract promises "lightweight planning and load-balancing mechanisms
+… dispersing traffic"; the Online Load Balancer (Algorithm 1) balances the
+*forwarder* assignment, but which lane hosts which expert was a frozen
+arithmetic map (``routing.ExpertPlacement``).  This module generalizes that to
+a **placement table** — an arbitrary expert→(lane, slot) assignment with
+per-expert replica counts — plus a greedy solver that packs *measured* expert
+loads (``core/traffic.py`` EMA statistics) onto lanes:
+
+  * hot experts get extra replicas (when the lane slot budget exceeds the
+    expert count), spread across *nodes* so most traffic stays on the fast
+    tier;
+  * per-lane load (sum of hosted experts' per-replica load) is equalized by
+    a longest-processing-time deal plus a local swap-improvement pass.
+
+A placement swap between training steps is a pure gather of the lane-major
+expert weight blocks (:func:`migrate_lane_major`); :func:`migration_stats`
+reports the bytes actually moved so the replan cadence can be chosen to
+amortize it (DESIGN.md §traffic).
+
+Everything the engines consume is the placement *interface*
+(``ep``/``node_size``/``experts_per_lane``/``lane_of_expert``/
+``local_expert_index``/``node_of_lane``/``replica_count``), so every dComm
+engine runs unchanged under arbitrary tables — conformance is enforced by
+``tests/test_engines.py`` against the dense oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TablePlacement:
+    """Arbitrary expert→lane placement with per-expert replication.
+
+    ``lane_expert[lane, slot]`` is the expert id hosted at local slot ``slot``
+    of ``lane``.  Every lane hosts exactly ``slots_per_lane`` expert slots
+    (static weight shapes); an expert may appear on several lanes (replicas —
+    always on *distinct* lanes) but at most once per lane.
+
+    Drop-in for :class:`routing.ExpertPlacement` everywhere the planner and
+    the dComm engines look: same static ints, same jnp-traceable maps.  The
+    one semantic extension: ``local_expert_index`` depends on the replica
+    choice (each copy lives at its own slot), so callers must pass the same
+    ``replica_choice`` to both maps — the planner does.
+    """
+
+    lane_expert: np.ndarray          # (ep, slots_per_lane) int32
+    node_size: int
+    n_experts: int
+
+    def __post_init__(self):
+        tbl = np.asarray(self.lane_expert, np.int32)
+        object.__setattr__(self, "lane_expert", tbl)
+        ep, spl = tbl.shape
+        if ep % self.node_size != 0:
+            raise ValueError(f"ep={ep} not divisible by node_size={self.node_size}")
+        if tbl.min() < 0 or tbl.max() >= self.n_experts:
+            raise ValueError("lane_expert entries must be in [0, n_experts)")
+        hosted = np.unique(tbl)
+        if len(hosted) != self.n_experts:
+            missing = sorted(set(range(self.n_experts)) - set(hosted.tolist()))
+            raise ValueError(f"experts not hosted by any lane: {missing}")
+        for lane in range(ep):
+            if len(set(tbl[lane].tolist())) != spl:
+                raise ValueError(
+                    f"lane {lane} hosts a duplicate expert (replica lanes "
+                    "must be distinct)")
+        # replica tables: lanes/slots hosting each expert, padded by repeating
+        # replica 0 (safe: choices are taken mod n_replicas)
+        n_rep = np.zeros(self.n_experts, np.int32)
+        lanes_of = [[] for _ in range(self.n_experts)]
+        slots_of = [[] for _ in range(self.n_experts)]
+        for lane in range(ep):
+            for slot in range(spl):
+                e = int(tbl[lane, slot])
+                lanes_of[e].append(lane)
+                slots_of[e].append(slot)
+                n_rep[e] += 1
+        mr = int(n_rep.max())
+        rl = np.zeros((self.n_experts, mr), np.int32)
+        rs = np.zeros((self.n_experts, mr), np.int32)
+        for e in range(self.n_experts):
+            for r in range(mr):
+                rl[e, r] = lanes_of[e][r % n_rep[e]]
+                rs[e, r] = slots_of[e][r % n_rep[e]]
+        object.__setattr__(self, "n_replicas", n_rep)
+        object.__setattr__(self, "replica_lanes", rl)
+        object.__setattr__(self, "replica_slots", rs)
+
+    # -- static ints (interface parity with ExpertPlacement) -----------------
+
+    @property
+    def ep(self) -> int:
+        return self.lane_expert.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.ep // self.node_size
+
+    @property
+    def experts_per_lane(self) -> int:
+        return self.lane_expert.shape[1]
+
+    @property
+    def max_replicas(self) -> int:
+        return self.replica_lanes.shape[1]
+
+    # -- jnp-traceable maps ---------------------------------------------------
+
+    def _choice(self, expert_ids: jax.Array, replica_choice) -> jax.Array:
+        if replica_choice is None:
+            return jnp.zeros_like(expert_ids)
+        nr = jnp.asarray(self.n_replicas)[expert_ids]
+        return replica_choice % nr
+
+    def lane_of_expert(self, expert_ids: jax.Array,
+                       replica_choice: jax.Array | None = None) -> jax.Array:
+        r = self._choice(expert_ids, replica_choice)
+        return jnp.asarray(self.replica_lanes)[expert_ids, r]
+
+    def local_expert_index(self, expert_ids: jax.Array,
+                           replica_choice: jax.Array | None = None) -> jax.Array:
+        r = self._choice(expert_ids, replica_choice)
+        return jnp.asarray(self.replica_slots)[expert_ids, r]
+
+    def node_of_lane(self, lane: jax.Array) -> jax.Array:
+        return lane // self.node_size
+
+    def replica_count(self, expert_ids: jax.Array) -> jax.Array:
+        return jnp.asarray(self.n_replicas)[expert_ids]
+
+
+# ---------------------------------------------------------------------------
+# Generic placement views (work for both placement classes)
+# ---------------------------------------------------------------------------
+
+def placement_table(placement) -> np.ndarray:
+    """(ep, experts_per_lane) expert-id table view of any placement."""
+    if isinstance(placement, TablePlacement):
+        return np.asarray(placement.lane_expert)
+    ep, spl, e = placement.ep, placement.experts_per_lane, placement.n_experts
+    tbl = np.zeros((ep, spl), np.int32)
+    for lane in range(ep):
+        for slot in range(spl):
+            tbl[lane, slot] = (lane * spl + slot) if e >= ep else lane % e
+    return tbl
+
+
+def replica_counts(placement) -> np.ndarray:
+    """(n_experts,) number of lanes hosting each expert."""
+    tbl = placement_table(placement)
+    return np.bincount(tbl.reshape(-1), minlength=placement.n_experts).astype(
+        np.int64)
+
+
+def lane_loads(expert_loads, placement) -> np.ndarray:
+    """Per-lane token load under a placement, assuming each expert's traffic
+    splits evenly across its replicas (what ``balanced_replica_choice``
+    enforces round-robin).  This is the metric the adaptive re-layout
+    minimizes the max of; fed from ``traffic.TrafficState.expert_ema``."""
+    loads = np.asarray(expert_loads, np.float64)
+    tbl = placement_table(placement)
+    per_rep = loads / np.maximum(replica_counts(placement), 1)
+    return per_rep[tbl].sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Greedy load-adaptive solver
+# ---------------------------------------------------------------------------
+
+def solve_placement(expert_loads, *, ep: int, node_size: int,
+                    slots_per_lane: int | None = None,
+                    swap_iters: int = 200) -> TablePlacement:
+    """Pack measured expert loads onto lanes (LAER-MoE-style re-layout).
+
+    1. **Replica allocation**: every expert gets one slot; the remaining
+       ``ep * slots_per_lane - n_experts`` slots go greedily to the expert
+       with the highest per-replica load (hot experts replicated, capped at
+       one replica per lane).
+    2. **Node-interleaved LPT deal**: (expert, replica) items sorted by
+       per-replica load descending, each expert's replicas consecutive, dealt
+       round-robin over a node-interleaved lane order — replicas land on
+       distinct lanes *and distinct nodes first* (cross-node traffic for a
+       hot expert drops to zero once every node hosts a copy).
+    3. **Swap improvement**: local swaps between the heaviest and lighter
+       lanes that reduce the max lane load while preserving the
+       distinct-lane invariant.
+
+    Pure host-side numpy — runs between steps at the relayout cadence, never
+    inside jit.
+    """
+    loads = np.maximum(np.asarray(expert_loads, np.float64), 1e-9)
+    n_experts = loads.shape[0]
+    if slots_per_lane is None:
+        slots_per_lane = -(-n_experts // ep)
+    if slots_per_lane > n_experts:
+        raise ValueError(
+            f"slots_per_lane={slots_per_lane} > n_experts={n_experts}: some "
+            "lane would host the same expert twice")
+    total = ep * slots_per_lane
+    if total < n_experts:
+        raise ValueError(
+            f"{total} slots cannot host {n_experts} experts")
+
+    # 1. replica allocation
+    reps = np.ones(n_experts, np.int64)
+    for _ in range(total - n_experts):
+        per = np.where(reps < ep, loads / reps, -np.inf)
+        reps[int(np.argmax(per))] += 1
+
+    # 2. node-interleaved LPT deal
+    order = np.argsort(-(loads / reps), kind="stable")
+    items = [e for e in order for _ in range(reps[e])]      # replicas adjacent
+    n_nodes = ep // node_size
+    lane_order = [(i % n_nodes) * node_size + i // n_nodes for i in range(ep)]
+    hosted: list[list[int]] = [[] for _ in range(ep)]
+    for j, e in enumerate(items):
+        hosted[lane_order[j % ep]].append(int(e))
+
+    # 3. swap improvement (max-lane-load descent)
+    per_rep = loads / reps
+    weight = [sum(per_rep[e] for e in h) for h in hosted]
+    for _ in range(swap_iters):
+        hi = int(np.argmax(weight))
+        lo = int(np.argmin(weight))
+        best, gain = None, 1e-12
+        for si, a in enumerate(hosted[hi]):
+            for sj, b in enumerate(hosted[lo]):
+                if a == b or a in hosted[lo] or b in hosted[hi]:
+                    continue                     # would duplicate on a lane
+                d = per_rep[a] - per_rep[b]
+                # swap reduces the pair's max iff 0 < d and hi stays heavier
+                if 0 < d < (weight[hi] - weight[lo]) and d > gain:
+                    best, gain = (si, sj, a, b), d
+        if best is None:
+            break
+        si, sj, a, b = best
+        hosted[hi][si], hosted[lo][sj] = b, a
+        weight[hi] -= gain
+        weight[lo] += gain
+
+    return TablePlacement(lane_expert=np.array(hosted, np.int32),
+                          node_size=node_size, n_experts=n_experts)
+
+
+# ---------------------------------------------------------------------------
+# Weight migration between placements
+# ---------------------------------------------------------------------------
+
+def _expert_home_flat(placement) -> np.ndarray:
+    """(n_experts,) flat (lane * experts_per_lane + slot) of replica 0."""
+    tbl = placement_table(placement)
+    spl = tbl.shape[1]
+    home = np.full(placement.n_experts, -1, np.int64)
+    for lane in range(tbl.shape[0]):
+        for slot in range(spl):
+            e = int(tbl[lane, slot])
+            if home[e] < 0:
+                home[e] = lane * spl + slot
+    return home
+
+
+def migration_gather_index(old_placement, new_placement) -> jax.Array:
+    """Flat source row (old layout) per destination slot (new layout):
+    ``new_w.reshape(ep*spl_new, ...)[i] = old_w.reshape(ep*spl_old, ...)[idx[i]]``.
+    Replicas source from the old placement's replica-0 copy."""
+    home = _expert_home_flat(old_placement)
+    new_tbl = placement_table(new_placement)
+    return jnp.asarray(home[new_tbl.reshape(-1)], I32)
+
+
+def migrate_lane_major(w: jax.Array, old_placement, new_placement,
+                       lane_axis: int = 0) -> jax.Array:
+    """Re-layout lane-major expert weights ``(..., ep, e_local, ...)`` from
+    ``old_placement`` to ``new_placement`` — the between-steps gather/permute
+    of ``w1``/``w3``/``w2`` expert blocks.  ``lane_axis`` locates the ``ep``
+    dim (``e_local`` must follow it)."""
+    idx = migration_gather_index(old_placement, new_placement)
+    ep_new = new_placement.ep
+    spl_new = new_placement.experts_per_lane
+    w = jnp.moveaxis(jnp.moveaxis(w, lane_axis, 0), lane_axis + 1, 1)
+    flat = w.reshape((w.shape[0] * w.shape[1],) + w.shape[2:])
+    out = jnp.take(flat, idx, axis=0).reshape(
+        (ep_new, spl_new) + flat.shape[1:])
+    return jnp.moveaxis(jnp.moveaxis(out, 1, lane_axis + 1), 0, lane_axis)
+
+
+def migration_stats(old_placement, new_placement, *, row_bytes: int) -> dict:
+    """How expensive is this relayout?  ``row_bytes`` is the byte size of one
+    expert's weight block (all migrated tensors combined, e.g. ``w1+w3+w2``).
+    A destination slot costs nothing when its source already lives on the
+    same lane (local copy); cross-lane rows are the wire traffic."""
+    home = _expert_home_flat(old_placement)
+    spl_old = old_placement.experts_per_lane
+    new_tbl = placement_table(new_placement)
+    src_lane = home[new_tbl] // spl_old                      # (ep, spl_new)
+    dst_lane = np.arange(new_tbl.shape[0])[:, None]
+    moved = int((src_lane != dst_lane).sum())
+    return {"slots": int(new_tbl.size), "rows_moved": moved,
+            "bytes_moved": moved * row_bytes}

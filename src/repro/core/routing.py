@@ -63,6 +63,16 @@ class ExpertPlacement:
         """Number of lanes holding a copy of each expert (>=1)."""
         return max(1, self.ep // self.n_experts)
 
+    @property
+    def max_replicas(self) -> int:
+        """Largest per-expert replica count (uniform here; see the
+        table-driven ``relayout.TablePlacement`` for the non-uniform case)."""
+        return self.replicas
+
+    def replica_count(self, expert_ids: jax.Array) -> jax.Array:
+        """Per-assignment replica count (uniform for the arithmetic map)."""
+        return jnp.full_like(expert_ids, self.replicas)
+
     # -- placement maps (all static python/jnp, shape (n_experts,) etc.) ------
 
     def lane_of_expert(self, expert_ids: jax.Array, replica_choice: jax.Array | None = None) -> jax.Array:
@@ -77,8 +87,16 @@ class ExpertPlacement:
     def node_of_lane(self, lane: jax.Array) -> jax.Array:
         return lane // self.node_size
 
-    def local_expert_index(self, expert_ids: jax.Array) -> jax.Array:
-        """Index of the expert within its lane's local expert table."""
+    def local_expert_index(self, expert_ids: jax.Array,
+                           replica_choice: jax.Array | None = None) -> jax.Array:
+        """Index of the expert within its lane's local expert table.
+
+        ``replica_choice`` is accepted for interface parity with the
+        table-driven placement (``relayout.TablePlacement``), where the local
+        slot depends on which replica lane was chosen; the arithmetic map is
+        replica-invariant (every replica lane hosts the expert at slot 0).
+        """
+        del replica_choice
         if self.n_experts >= self.ep:
             return expert_ids % self.experts_per_lane
         return jnp.zeros_like(expert_ids)  # one (replicated) expert per lane
@@ -117,8 +135,13 @@ def balanced_replica_choice(A: jax.Array, placement: ExpertPlacement) -> jax.Arr
     sender-local analogue of picking the least-loaded replica.  Beyond-paper:
     the paper has no replication (its EP >= n_experts always); we need it for
     Mixtral-8e on 16 lanes and it doubles as decode-time load balancing.
+
+    Works for any placement exposing ``max_replicas``/``replica_count`` —
+    both the arithmetic :class:`ExpertPlacement` (uniform replicas) and the
+    table-driven ``relayout.TablePlacement`` (per-expert replica counts,
+    hot experts replicated more).
     """
-    if placement.replicas == 1:
+    if placement.max_replicas == 1:
         return jnp.zeros_like(A)
     T, K = A.shape
     flat = A.reshape(-1)
@@ -126,4 +149,4 @@ def balanced_replica_choice(A: jax.Array, placement: ExpertPlacement) -> jax.Arr
     one_hot = jax.nn.one_hot(flat, placement.n_experts, dtype=jnp.int32)
     occ = jnp.cumsum(one_hot, axis=0) - one_hot  # occurrences before this slot
     occ_of_slot = jnp.take_along_axis(occ, flat[:, None], axis=1)[:, 0]
-    return (occ_of_slot % placement.replicas).reshape(T, K).astype(jnp.int32)
+    return (occ_of_slot % placement.replica_count(flat)).reshape(T, K).astype(jnp.int32)

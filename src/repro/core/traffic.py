@@ -1,0 +1,126 @@
+"""Online traffic statistics — the measurement half of adaptive placement.
+
+Collects, *inside the shard_map island*, the two signals the paper's
+load-balancing machinery needs but the seed never fed it:
+
+  * **per-expert token counts** — how hot is each expert this step (drives
+    the load-adaptive re-layout solver, ``core/relayout.py``);
+  * **per-lane cross-node send rows** (node-deduplicated, matching the
+    hierarchical engine's stage-1 semantics) — the per-GPU cross-node send
+    volume Algorithm 1 (``core/balancer.py``) partitions into communication
+    groups.
+
+State is an explicit, pure EMA accumulator (:class:`TrafficState`) threaded
+through ``layers/moe.moe_block`` and the ``models/lm`` layer scans like RNG
+state: :func:`observe` is jit-safe, statically shaped, and psums the per-step
+counts over the island's mesh axes so every shard carries the same replicated
+statistics.  Between steps the host reads ``expert_ema`` to replan placement
+(``launch/train.py --relayout-every``) and the serving engine snapshots
+per-wave loads.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.descriptors import group_counts
+from repro.core.routing import balanced_replica_choice
+
+F32 = jnp.float32
+
+
+class TrafficState(NamedTuple):
+    """EMA traffic accumulators (replicated across the island's shards).
+
+    Leaves gain a leading ``(n_layers,)`` dim when stacked for a layer scan
+    (:func:`init_traffic_state` with ``n_layers``) — each MoE layer threads
+    its own slice, exactly like stacked layer params.
+    """
+    expert_ema: jax.Array       # (E,) EMA of per-step per-expert token counts
+    lane_send_ema: jax.Array    # (EP,) EMA of per-lane cross-node send rows
+    last_expert_count: jax.Array  # (E,) raw counts of the latest observation
+    steps: jax.Array            # () int32 observations so far
+
+
+def init_traffic_state(n_experts: int, ep: int,
+                       n_layers: int | None = None) -> TrafficState:
+    def z(shape):
+        if n_layers is not None:
+            shape = (n_layers,) + shape
+        return jnp.zeros(shape, F32)
+    steps = jnp.zeros((n_layers,) if n_layers is not None else (), jnp.int32)
+    return TrafficState(z((n_experts,)), z((ep,)), z((n_experts,)), steps)
+
+
+def observe(state: TrafficState, A: jax.Array, placement, src_lane,
+            decay: float = 0.99, axis_names=()) -> TrafficState:
+    """Fold one routing matrix into the EMA accumulators.
+
+    Args:
+      A: (T, K) token-expert matrix (this shard's tokens when called inside
+         the island, all tokens when called globally).
+      placement: any placement (arithmetic or table) — fixes the expert→lane
+         map and the replica spreading, so the cross-node counts match what
+         the engines actually send.
+      src_lane: source lane of the rows in ``A`` — a scalar (the island
+         caller passes its own lane index) or a (T,) per-token vector (global
+         callers, e.g. benchmarks, where tokens span all lanes).
+      axis_names: mesh axes to psum the per-step counts over (the island's
+         data + EP axes); empty for single-process/global use.
+
+    Counts are integers derived from ``A`` — no gradient flows; the update is
+    pure and statically shaped, safe under jit/scan/grad.
+    """
+    t = A.shape[0]
+    n_nodes = placement.n_nodes
+    e_cnt = group_counts(A.reshape(-1), placement.n_experts).astype(F32)
+
+    replica = balanced_replica_choice(A, placement)
+    lane = placement.lane_of_expert(A, replica)               # (T, K)
+    node = placement.node_of_lane(lane)                       # (T, K)
+    src_lane = jnp.broadcast_to(jnp.asarray(src_lane, jnp.int32), (t,))
+    my_node = src_lane // placement.node_size                 # (T,)
+    # node-deduplicated (hier stage-1 semantics): one row per (token, node)
+    uses = jnp.zeros((t, n_nodes), jnp.bool_).at[
+        jnp.arange(t)[:, None], node].set(True)
+    cross = (uses & (jnp.arange(n_nodes)[None, :] != my_node[:, None])).sum(
+        axis=1).astype(F32)                                   # (T,)
+    lane_cnt = jnp.zeros((placement.ep,), F32).at[src_lane].add(cross)
+
+    for ax in axis_names:
+        e_cnt = jax.lax.psum(e_cnt, ax)
+        lane_cnt = jax.lax.psum(lane_cnt, ax)
+
+    d = jnp.asarray(decay, F32)
+    return TrafficState(
+        expert_ema=d * state.expert_ema + (1 - d) * e_cnt,
+        lane_send_ema=d * state.lane_send_ema + (1 - d) * lane_cnt,
+        last_expert_count=e_cnt,
+        steps=state.steps + 1)
+
+
+def has_stats(state: TrafficState) -> jax.Array:
+    """Whether any observation has been folded in (gating for consumers)."""
+    return state.steps > 0
+
+
+def expert_loads(state: TrafficState, decay: float = 0.99) -> jax.Array:
+    """Bias-corrected per-expert load estimate (EMA warm-up debiasing)."""
+    corr = 1.0 - jnp.asarray(decay, F32) ** jnp.maximum(
+        state.steps.astype(F32), 1.0)
+    return state.expert_ema / corr
+
+
+def balancer_loads(state: TrafficState, placement) -> jax.Array:
+    """Algorithm 1 input: (n_nodes, node_size) per-GPU cross-node send load
+    from the lane-send EMA.  Feeding the balancer from EMA state is safe
+    from step 0: on the all-zero cold-start state Algorithm 1 still emits a
+    *valid* grouping (argsort ties broken stably, then per-node rotation —
+    NOT the same table as ``static_assignment``), and every valid grouping
+    is correctness-equivalent (conformance holds under arbitrary forwarder
+    choices); with zero load knowledge its balance quality is no better and
+    no worse than the static grouping's."""
+    return state.lane_send_ema.reshape(placement.n_nodes, placement.node_size)

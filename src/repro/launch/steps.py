@@ -50,11 +50,21 @@ def make_train_step(bundle: zoo.ModelBundle, opt_cfg: adamw.AdamWConfig,
     accumulation) — activation temps shrink ~1/accum at the same global
     batch, the lever that fits mixtral-class models in 16 GB/chip."""
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, traffic=None):
         if accum == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                bundle.loss, has_aux=True)(params, batch)
+            if traffic is None:
+                (loss, metrics), grads = jax.value_and_grad(
+                    bundle.loss, has_aux=True)(params, batch)
+            else:
+                # online traffic stats ride along as an aux metric (counts
+                # derive from the int routing matrix — no gradient path)
+                (loss, metrics), grads = jax.value_and_grad(
+                    bundle.loss, has_aux=True)(params, batch, traffic=traffic)
         else:
+            if traffic is not None:
+                raise NotImplementedError(
+                    "traffic stats + gradient accumulation: thread the state "
+                    "through the microbatch scan carry first")
             micro = jax.tree.map(
                 lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
                 batch)

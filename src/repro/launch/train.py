@@ -8,13 +8,18 @@ fault-tolerant loop with checkpointing and the deterministic data stream.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import checkpointer
 from repro.configs import get_arch
+from repro.core import relayout, traffic as traffic_lib
 from repro.data.pipeline import ShardedLoader, SyntheticLM, ZipfNgramLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import batch_specs, make_train_step
@@ -23,6 +28,95 @@ from repro.models.lm import make_context
 from repro.optim import adamw
 from repro.parallel import sharding as sh
 from repro.runtime.fault_tolerance import RunConfig, run_training
+
+
+def _migrate_moe_tree(tree, old_placement, new_placement):
+    """Re-layout the lane-major expert leaves of a params-shaped tree
+    (``layers/moe/{w1,w3,w2}``, each ``(L, ep, e_local, ...)``) onto a new
+    placement.  Everything else (router, dense layers) is placement-invariant."""
+    moe = tree["layers"]["moe"]
+    out = dict(moe)
+    for name in ("w1", "w3", "w2"):
+        out[name] = relayout.migrate_lane_major(
+            moe[name], old_placement, new_placement, lane_axis=1)
+    tree = dict(tree)
+    tree["layers"] = dict(tree["layers"])
+    tree["layers"]["moe"] = out
+    return tree
+
+
+# --- placement history (relayout × checkpoint/restart consistency) ---------
+# Checkpoints save params in whatever expert layout was active at that step;
+# restoring one MUST re-establish that layout or every lane silently applies
+# the wrong experts' weights.  The history sidecar records (active_from_step,
+# placement table) pairs in the checkpoint dir; restarts look up the table
+# active at the committed step.
+
+def _history_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, "placement_history.npz")
+
+
+def save_placement_history(ckpt_dir: str, history, node_size: int) -> None:
+    """history: list of (active_from_step, placement).  Written synchronously
+    at every relayout, so any checkpoint committed later can be re-based."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    np.savez(_history_path(ckpt_dir),
+             steps=np.array([s for s, _ in history], np.int64),
+             tables=np.stack([relayout.placement_table(p)
+                              for _, p in history]),
+             node_size=np.int64(node_size))
+
+
+def load_placement_history(ckpt_dir: str, n_experts: int):
+    """-> list of (active_from_step, placement) or None when never relayouted."""
+    path = _history_path(ckpt_dir)
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    ns = int(z["node_size"])
+    return [(int(s), relayout.TablePlacement(tbl, node_size=ns,
+                                             n_experts=n_experts))
+            for s, tbl in zip(z["steps"], z["tables"])]
+
+
+def placement_at_step(history, step: int):
+    """The placement whose layout a checkpoint committed at ``step`` holds:
+    the last history entry with active_from <= step."""
+    active = [p for s, p in history if s <= step]
+    return active[-1] if active else history[0][1]
+
+
+def apply_relayout(params, opt, traffic_state, ctx, *, slots_per_lane=None,
+                   log=print):
+    """Between-steps placement swap: solve a table placement from the EMA
+    expert loads (summed over layers), then gather-migrate the expert weight
+    blocks AND their optimizer moments/master copies so training continues
+    bit-compatibly (the loss is invariant under re-layout — only which lane
+    hosts which expert changes).  Returns (params, opt, new_ctx, stats)."""
+    old = ctx.placement
+    loads = np.asarray(traffic_state.expert_ema)
+    if loads.ndim > 1:                     # per-layer stacked state
+        loads = loads.sum(axis=0)
+    new = relayout.solve_placement(
+        loads, ep=old.ep, node_size=old.node_size,
+        slots_per_lane=slots_per_lane or old.experts_per_lane)
+    w1 = params["layers"]["moe"]["w1"]
+    d, f = w1.shape[-2], w1.shape[-1]
+    n_layers = w1.shape[0]
+    row_bytes = n_layers * (2 * d * f + f * d) * w1.dtype.itemsize
+    stats = relayout.migration_stats(old, new, row_bytes=row_bytes)
+    params = _migrate_moe_tree(params, old, new)
+    opt = adamw.AdamWState(
+        opt.step,
+        _migrate_moe_tree(opt.mu, old, new),
+        _migrate_moe_tree(opt.nu, old, new),
+        _migrate_moe_tree(opt.master, old, new))
+    mx_old = float(relayout.lane_loads(loads, old).max())
+    mx_new = float(relayout.lane_loads(loads, new).max())
+    log(f"relayout: max-lane load {mx_old:.1f} -> {mx_new:.1f}, "
+        f"{stats['rows_moved']}/{stats['slots']} expert blocks moved "
+        f"({stats['bytes_moved'] / 1e6:.2f} MB)", flush=True)
+    return params, opt, dataclasses.replace(ctx, placement=new), stats
 
 
 def main(argv=None):
@@ -48,6 +142,13 @@ def main(argv=None):
                          "per-layer islands")
     ap.add_argument("--pipe-slices", type=int, default=0,
                     help="fused_pipe slice count; 0 = auto via pipesim")
+    ap.add_argument("--relayout-every", type=int, default=0,
+                    help="moe family: every N steps, re-solve the expert "
+                         "placement from the online EMA traffic stats and "
+                         "migrate the expert weight blocks (0 = static "
+                         "placement); stats are collected either way")
+    ap.add_argument("--traffic-decay", type=float, default=0.99,
+                    help="EMA decay of the online traffic statistics")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -58,7 +159,18 @@ def main(argv=None):
                        capacity_factor=args.capacity_factor,
                        node_size=max(1, mesh.shape["model"] // 2),
                        moe_stream=args.moe_stream,
-                       pipe_slices=args.pipe_slices)
+                       pipe_slices=args.pipe_slices,
+                       traffic_decay=args.traffic_decay)
+    # resuming a run that relayouted: the checkpoint's weights are laid out
+    # per the placement-history sidecar, not the arithmetic map
+    if cfg.moe is not None and cfg.family == "moe":
+        history = load_placement_history(args.ckpt_dir, cfg.moe.n_experts)
+        committed = checkpointer.latest_step(args.ckpt_dir)
+        if history is not None and committed is not None:
+            ctx = dataclasses.replace(
+                ctx, placement=placement_at_step(history, committed))
+            print(f"[relayout] resuming with the placement active at "
+                  f"committed step {committed}", flush=True)
     bundle = zoo.build(cfg, ctx)
 
     key = jax.random.PRNGKey(0)
@@ -76,6 +188,52 @@ def main(argv=None):
         step_fn = jax.jit(make_train_step(bundle, opt_cfg),
                           donate_argnums=(0, 1))
 
+        # online traffic stats: per-layer EMA state threaded through the MoE
+        # islands (moe family); feeds the hier balancer every step and the
+        # load-adaptive re-layout at the --relayout-every cadence.
+        traffic = None
+        if cfg.moe is not None and cfg.family == "moe":
+            traffic = traffic_lib.init_traffic_state(
+                cfg.moe.n_experts, ctx.placement.ep, n_layers=cfg.n_layers)
+        box = {"ctx": ctx, "bundle": bundle, "step_fn": step_fn,
+               "traffic": traffic, "n": 0, "fence": False,
+               "history": [(0, ctx.placement)]}
+
+        def rebuild(new_ctx):
+            box["ctx"] = new_ctx
+            box["bundle"] = zoo.build(cfg, new_ctx)
+            box["step_fn"] = jax.jit(make_train_step(box["bundle"], opt_cfg),
+                                     donate_argnums=(0, 1))
+            # the next call pays XLA recompilation — fence it off from the
+            # runtime's straggler monitor (compile time is not lane health)
+            box["fence"] = True
+
+        def on_restart(step, restored):
+            """Re-base the adaptive-placement state after a rewind: the
+            restored checkpoint's weights carry the layout that was active at
+            ``step``, and the relayout cadence counter must rewind with the
+            replayed stream.  EMA stats restart cold (they re-warm within
+            their horizon; DESIGN.md §traffic)."""
+            box["n"] = step
+            if box["traffic"] is not None:
+                box["traffic"] = traffic_lib.init_traffic_state(
+                    cfg.moe.n_experts, box["ctx"].placement.ep,
+                    n_layers=cfg.n_layers)
+            if restored:
+                # drop relayouts newer than the committed step, match layout
+                box["history"] = [(s, p) for s, p in box["history"]
+                                  if s <= step] or box["history"][:1]
+                want = placement_at_step(box["history"], step)
+                if want is not box["ctx"].placement:
+                    rebuild(dataclasses.replace(box["ctx"], placement=want))
+            else:
+                # params were KEPT (no committed checkpoint): the current
+                # layout stays live and is what any future checkpoint saves
+                box["history"] = [(0, box["ctx"].placement)]
+            if args.relayout_every:
+                save_placement_history(args.ckpt_dir, box["history"],
+                                       box["ctx"].placement.node_size)
+
         src_cls = ZipfNgramLM if args.data == "zipf" else SyntheticLM
         source = src_cls(cfg.vocab, args.seq, args.batch)
         ispecs = {k: v for k, v in source.batch_at(0).items()}
@@ -92,18 +250,46 @@ def main(argv=None):
 
         def wrapped(params, opt, batch):
             t0 = time.perf_counter()
-            params, opt, metrics = step_fn(params, opt, batch)
+            if box["traffic"] is not None:
+                params, opt, metrics = box["step_fn"](params, opt, batch,
+                                                      box["traffic"])
+                box["traffic"] = metrics.pop("traffic")
+            else:
+                params, opt, metrics = box["step_fn"](params, opt, batch)
             loss = float(metrics["loss"])
             t_hist.append(time.perf_counter() - t0)
             n = len(t_hist)
+            box["n"] += 1
+            if box["fence"]:
+                box["fence"] = False
+                metrics["straggler_fence"] = True
             if n % args.log_every == 1:
                 print(f"step {n:5d}  loss {loss:.4f}  "
                       f"{np.mean(t_hist[-args.log_every:]):.3f}s/step", flush=True)
+            if (args.relayout_every and box["traffic"] is not None
+                    and box["n"] % args.relayout_every == 0):
+                params, opt, new_ctx, _ = apply_relayout(
+                    params, opt, box["traffic"], box["ctx"])
+                # expert counts stay valid across the swap, but the per-lane
+                # send EMA was measured under the OLD table — restart it cold
+                # rather than misattribute forwarder load for an EMA horizon
+                box["traffic"] = box["traffic"]._replace(
+                    lane_send_ema=jnp.zeros_like(box["traffic"].lane_send_ema))
+                # the placement table is baked into the jitted step — re-jit;
+                # amortized over the relayout cadence (DESIGN.md §traffic)
+                rebuild(new_ctx)
+                # the new layout is active from this step on: any checkpoint
+                # committed at step >= box["n"] holds it — record BEFORE the
+                # runtime can save one
+                box["history"].append((box["n"], new_ctx.placement))
+                save_placement_history(args.ckpt_dir, box["history"],
+                                       new_ctx.placement.node_size)
             return params, opt, metrics
 
         rcfg = RunConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                          ckpt_every=args.ckpt_every,
-                         inject_failure_at=args.inject_failure_at)
+                         inject_failure_at=args.inject_failure_at,
+                         on_restart=on_restart)
         (params, opt), run = run_training(wrapped, (params, opt), batch_at, rcfg)
         print(f"done: {run.steps_run} steps, {run.restarts} restarts, "
               f"{run.straggler_events} straggler events")

@@ -25,19 +25,31 @@ import jax.numpy as jnp
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.dcomm import DcommConfig
-from repro.core.routing import ExpertPlacement
+from repro.core.dcomm import DcommConfig, _lane_index
+from repro.core.routing import ExpertPlacement, router_logits, top_k_routing
+from repro.core import balancer as balancer_lib
 from repro.core import fusco
+from repro.core import traffic as traffic_lib
 
 
 def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
               dcfg: DcommConfig, top_k: int, data_axes=("data",),
-              norm_topk: bool = True, fsdp: bool = False) -> jax.Array:
+              norm_topk: bool = True, fsdp: bool = False,
+              traffic: traffic_lib.TrafficState | None = None,
+              traffic_decay: float = 0.99):
     """x: (B, S, d) global. Expert weights sharded over the EP axes.
 
     Weight layout: w1/w3 (E_lanes, E_local, d, f), w2 (E_lanes, E_local, f, d)
     where E_lanes = placement.ep — lane-major so a plain PartitionSpec shards
     them (replicated experts appear once per hosting lane).
+
+    ``traffic`` threads this layer's online traffic statistics through the
+    island (state in, updated state out — like RNG state): the routing matrix
+    is folded into the EMA accumulators *inside* the island, and when the
+    engine is hierarchical with the balancer on, Algorithm 1 is fed the EMA
+    lane-send loads instead of the static balancer-off grouping
+    (``balancer.static_assignment`` remains the ``use_balancer=False``
+    ablation knob).  Returns ``(y, new_traffic)`` when given, ``y`` otherwise.
     """
     ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
     ep_axes = tuple(ep_axes)
@@ -50,24 +62,35 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
     else:
         w_spec = w2_spec = P(ep_axes, None, None, None)
     r_spec = P(None, None)
+    axis_names = tuple(data_axes) + ep_axes
 
-    def inner(xl, wr, w1, w3, w2):
+    def inner(xl, wr, w1, w3, w2, tr):
         if fsdp:
             w1 = jax.lax.all_gather(w1, "data", axis=3, tiled=True)
             w3 = jax.lax.all_gather(w3, "data", axis=3, tiled=True)
             w2 = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
         b, s, d = xl.shape
         xt = xl.reshape(b * s, d)
-        y = fusco.moe_shuffle_ffn(
-            xt, wr, w1[0], w3[0], w2[0], placement, dcfg, top_k,
-            norm_topk=norm_topk)
-        return y.reshape(b, s, d)
+        logits = router_logits(xt, wr)
+        A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
+        assignment = None
+        if tr is not None:
+            tr = traffic_lib.observe(tr, A, placement, _lane_index(dcfg, placement),
+                                     decay=traffic_decay, axis_names=axis_names)
+            if dcfg.engine == "fused_hier" and dcfg.use_balancer:
+                assignment = balancer_lib.algorithm1_groups(
+                    traffic_lib.balancer_loads(tr, placement))
+        y = fusco.shuffle_ffn(xt, A, gates.astype(xt.dtype), w1[0], w3[0],
+                              w2[0], placement, dcfg, assignment)
+        return y.reshape(b, s, d), tr
 
+    t_spec = jax.tree.map(lambda l: P(*([None] * l.ndim)), traffic)
     fn = shard_map(inner, mesh=mesh,
-                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec),
-                   out_specs=x_spec, check_vma=False)
-    return fn(x, moe_params["router"], moe_params["w1"], moe_params["w3"],
-              moe_params["w2"])
+                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, t_spec),
+                   out_specs=(x_spec, t_spec), check_vma=False)
+    y, new_traffic = fn(x, moe_params["router"], moe_params["w1"],
+                        moe_params["w3"], moe_params["w2"], traffic)
+    return y if traffic is None else (y, new_traffic)
 
 
 def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
@@ -128,12 +151,7 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
 
 def lane_major_expert_weights(w_all: jax.Array, placement: ExpertPlacement) -> jax.Array:
     """(E, d, f) canonical expert weights -> (ep, E_local, d, f) lane-major
-    layout (replicated experts duplicated per hosting lane)."""
-    lanes = []
-    for lane in range(placement.ep):
-        if placement.n_experts >= placement.ep:
-            lo = lane * placement.experts_per_lane
-            lanes.append(w_all[lo:lo + placement.experts_per_lane])
-        else:
-            lanes.append(w_all[lane % placement.n_experts][None])
-    return jnp.stack(lanes)
+    layout (replicated experts duplicated per hosting lane).  Works for any
+    placement — arithmetic or table-driven — via its expert-id table view."""
+    from repro.core.relayout import placement_table
+    return w_all[jnp.asarray(placement_table(placement))]

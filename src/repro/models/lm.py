@@ -52,6 +52,9 @@ class ModelContext:
     # overlaps the combine of layer i with the dispatch of layer i+1 inside
     # a block); <=1 keeps per-layer islands.
     moe_stream: int = 0
+    # EMA decay of the online traffic statistics (when a TrafficState is
+    # threaded through the forward)
+    traffic_decay: float = 0.99
 
     def tp_eligible(self):
         """Explicit Megatron-TP blocks need head-divisible archs, plain RoPE,
@@ -105,7 +108,8 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
                  engine: str = "fused_flat", capacity_factor: float = 2.0,
                  use_balancer: bool = True, node_size: int | None = None,
                  remat: bool = True, moe_stream: int = 0,
-                 pipe_slices: int = 0) -> ModelContext:
+                 pipe_slices: int = 0,
+                 traffic_decay: float = 0.99) -> ModelContext:
     placement = dcfg = None
     if cfg.moe is not None:
         axes = dict(mesh.shape)
@@ -124,7 +128,7 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
         fsdp = per_lane_gb > 4.0       # ZeRO-3 the expert weights when large
     return ModelContext(cfg=cfg, mesh=mesh, multi_pod=multi_pod, dcfg=dcfg,
                         placement=placement, remat=remat, fsdp_experts=fsdp,
-                        moe_stream=moe_stream)
+                        moe_stream=moe_stream, traffic_decay=traffic_decay)
 
 
 # ---------------------------------------------------------------------------
@@ -260,11 +264,22 @@ def _scan_layers(layer_fn, h, layers, cfg: ArchConfig, remat: bool):
     return jax.lax.scan(body, h, layers)
 
 
-def forward_hidden(params, inputs, positions, ctx: ModelContext):
+def forward_hidden(params, inputs, positions, ctx: ModelContext,
+                   traffic=None):
     """inputs: (B, S) int tokens, or (B, S, d) embeddings (VLM/audio stubs).
-    Returns final-norm'd hidden states (B, S, d) in compute dtype."""
+    Returns final-norm'd hidden states (B, S, d) in compute dtype.
+
+    ``traffic``: optional per-layer stacked ``traffic.TrafficState`` (leading
+    ``(L,)`` dim, like stacked layer params) threaded through the MoE islands
+    — each layer's slice rides the layer scan as xs and comes back updated as
+    ys, exactly like RNG state would.  Returns ``(h, new_traffic)`` when
+    given.  Supported for the ``moe`` family (per-layer islands)."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
+    if traffic is not None and cfg.family != "moe":
+        raise ValueError(
+            f"traffic stats are threaded per-layer through moe_block islands; "
+            f"family {cfg.family!r} is not supported (moe only)")
     if inputs.ndim == 2:
         h = params["embed"].astype(cd)[inputs]
     else:
@@ -304,6 +319,9 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext):
         return rms_norm(h, params["final_norm"].astype(cd))
 
     def layer_fn(h, lp, is_global=False):
+        tr = None
+        if traffic is not None:
+            lp, tr = lp
         lp = jax.tree.map(lambda x: x.astype(cd)
                           if x.dtype in (jnp.float32, jnp.bfloat16) else x, lp)
         if cfg.family in ("dense", "moe", "vlm", "hybrid"):
@@ -340,7 +358,10 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext):
                               placement=ctx.placement, dcfg=ctx.dcfg,
                               top_k=cfg.moe.top_k, data_axes=ctx.data_axes,
                               norm_topk=cfg.moe.norm_topk,
-                              fsdp=ctx.fsdp_experts)
+                              fsdp=ctx.fsdp_experts, traffic=tr,
+                              traffic_decay=ctx.traffic_decay)
+                if tr is not None:
+                    y, tr = y
             elif use_tp:
                 from repro.parallel.tp_blocks import megatron_mlp
                 x = rms_norm(h, lp["ln2"])
@@ -361,21 +382,29 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext):
             h = ctx.constrain(h + y)
         else:
             raise ValueError(cfg.family)
-        return h, None
+        return h, tr
 
-    h, _ = _scan_layers(layer_fn, h, params["layers"], cfg, ctx.remat)
-    return rms_norm(h, params["final_norm"].astype(cd))
+    xs = params["layers"] if traffic is None else (params["layers"], traffic)
+    h, new_traffic = _scan_layers(layer_fn, h, xs, cfg, ctx.remat)
+    h = rms_norm(h, params["final_norm"].astype(cd))
+    return h if traffic is None else (h, new_traffic)
 
 
-def lm_loss(params, batch, ctx: ModelContext):
+def lm_loss(params, batch, ctx: ModelContext, traffic=None):
     """Next-token CE, chunked over the sequence so (B, Sc, V) logits never
-    exceed the activation budget.  Returns (loss, metrics)."""
+    exceed the activation budget.  Returns (loss, metrics); with ``traffic``
+    the updated per-layer traffic state rides along as ``metrics["traffic"]``
+    (an aux output — counts derive from the int routing matrix, so no
+    gradient flows through it)."""
     cfg = ctx.cfg
     inputs = batch.get("embeds", batch.get("tokens"))
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.arange(inputs.shape[1])
-    h = forward_hidden(params, inputs, positions, ctx)
+    h = forward_hidden(params, inputs, positions, ctx, traffic=traffic)
+    new_traffic = None
+    if traffic is not None:
+        h, new_traffic = h
     labels = batch["labels"]                     # (B, S) — already shifted
     head = params["lm_head"].astype(ctx.compute_dtype)
 
@@ -398,7 +427,10 @@ def lm_loss(params, batch, ctx: ModelContext):
 
     tot, _ = jax.lax.scan(jax.checkpoint(chunk), jnp.zeros((2,)), (hc, lc))
     loss = tot[0] / jnp.maximum(tot[1], 1.0)
-    return loss, {"loss": loss, "tokens": tot[1]}
+    metrics = {"loss": loss, "tokens": tot[1]}
+    if new_traffic is not None:
+        metrics["traffic"] = new_traffic
+    return loss, metrics
 
 
 # ---------------------------------------------------------------------------
@@ -580,13 +612,21 @@ def decode_step(params, state: DecodeState, inputs, ctx: ModelContext,
         state.length + 1)
 
 
-def prefill(params, inputs, positions, ctx: ModelContext, max_len: int):
+def prefill(params, inputs, positions, ctx: ModelContext, max_len: int,
+            traffic=None):
     """Run the full-sequence forward and materialise decode state.
 
     Implemented as forward_hidden + per-layer cache extraction for attention
-    archs (recompute-free: k/v are emitted as scan ys)."""
+    archs (recompute-free: k/v are emitted as scan ys).  ``traffic`` (moe
+    family): per-layer stacked traffic state threaded through the MoE
+    islands; returns ``(logits, state, new_traffic)`` when given — this is
+    what lets the serving engine report per-wave expert-load stats."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
+    if traffic is not None and cfg.family != "moe":
+        raise ValueError(
+            f"traffic stats in prefill are supported for the moe family "
+            f"only, got {cfg.family!r}")
     if cfg.family == "moe_ffn":
         # stateless stack: prefill is just the forward (stream blocks incl.)
         h = forward_hidden(params, inputs, positions, ctx)
@@ -604,6 +644,9 @@ def prefill(params, inputs, positions, ctx: ModelContext, max_len: int):
     cap = _kv_capacity(cfg, max_len)
 
     def layer_fn(h, lp, is_global=False):
+        tr = None
+        if traffic is not None:
+            lp, tr = lp
         lp = jax.tree.map(lambda x: x.astype(cd)
                           if x.dtype in (jnp.float32, jnp.bfloat16) else x, lp)
         kv_out = ssm_out = None
@@ -681,7 +724,10 @@ def prefill(params, inputs, positions, ctx: ModelContext, max_len: int):
             if cfg.family == "moe":
                 y = moe_block(x, lp["moe"], mesh=ctx.mesh, placement=ctx.placement,
                               dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
-                              data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk)
+                              data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk,
+                              traffic=tr, traffic_decay=ctx.traffic_decay)
+                if tr is not None:
+                    y, tr = y
             else:
                 u = jax.lax.with_sharding_constraint(
                     x @ lp["mlp"]["w_gate"], ctx.mid_spec())
@@ -696,14 +742,21 @@ def prefill(params, inputs, positions, ctx: ModelContext, max_len: int):
             ssm_out = {"state": st2.ssd, "conv": st2.conv}
             h = ctx.constrain(h + y)
         dummy = jnp.zeros((), jnp.int32)
-        return h, (kv_out if kv_out is not None else dummy,
-                   ssm_out if ssm_out is not None else dummy)
+        ys = (kv_out if kv_out is not None else dummy,
+              ssm_out if ssm_out is not None else dummy)
+        if traffic is not None:
+            ys = ys + (tr,)
+        return h, ys
 
-    h, (kv, ssm) = _scan_layers(layer_fn, h, params["layers"], cfg, ctx.remat)
+    xs = params["layers"] if traffic is None else (params["layers"], traffic)
+    h, ys = _scan_layers(layer_fn, h, xs, cfg, ctx.remat)
+    kv, ssm = ys[0], ys[1]
     h = rms_norm(h, params["final_norm"].astype(cd))
     logits = (h[:, -1] @ params["lm_head"].astype(cd)).astype(jnp.float32)
     has_kv = cfg.family in ("dense", "moe", "vlm", "hybrid")
     has_ssm = cfg.family in ("ssm", "hybrid")
     state = DecodeState(kv if has_kv else None, ssm if has_ssm else None,
                         jnp.array(s, jnp.int32))
+    if traffic is not None:
+        return logits, state, ys[2]
     return logits, state

@@ -39,6 +39,13 @@ class RunConfig:
     straggler_factor: float = 2.0
     straggler_window: int = 16
     inject_failure_at: int | None = None   # deterministic injection (tests)
+    # called as on_restart(step, restored) after every rewind: ``restored``
+    # is True when (params, opt) were reloaded from a committed checkpoint
+    # (the step function must re-base any state keyed to the step index or
+    # to the parameter layout — e.g. the adaptive expert placement, whose
+    # table must match the restored weights' layout), False when the run
+    # restarts from scratch with the in-memory params kept.
+    on_restart: Callable[[int, bool], None] | None = None
 
 
 @dataclasses.dataclass
@@ -64,6 +71,8 @@ def run_training(step_fn: Callable, init_state: tuple, batch_at: Callable,
         (params, opt), _ = _restore(cfg.ckpt_dir, (params, opt))
         step = start
         log(f"[ft] resumed from committed step {step}")
+        if cfg.on_restart is not None:
+            cfg.on_restart(step, True)
     pending = None
     times: deque = deque(maxlen=cfg.straggler_window)
     injected = False
@@ -79,16 +88,22 @@ def run_training(step_fn: Callable, init_state: tuple, batch_at: Callable,
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             # ---- straggler monitor ----------------------------------------
-            if len(times) >= max(4, cfg.straggler_window // 2):
-                med = float(np.median(times))
-                if dt > cfg.straggler_factor * med:
-                    run.straggler_events += 1
-                    lane = run.straggler_events % 16
-                    run.demoted_lanes = tuple(set(run.demoted_lanes) | {lane})
-                    log(f"[ft] straggler: step {step} took {dt:.3f}s "
-                        f"(median {med:.3f}s) — demoting lane {lane} from "
-                        f"forwarder duty for the next plan")
-            times.append(dt)
+            # a step may declare itself a timing fence (e.g. the first step
+            # after an adaptive-placement re-jit): its dt is compile time,
+            # not lane health — skip the check and restart the window
+            if metrics.pop("straggler_fence", False):
+                times.clear()
+            else:
+                if len(times) >= max(4, cfg.straggler_window // 2):
+                    med = float(np.median(times))
+                    if dt > cfg.straggler_factor * med:
+                        run.straggler_events += 1
+                        lane = run.straggler_events % 16
+                        run.demoted_lanes = tuple(set(run.demoted_lanes) | {lane})
+                        log(f"[ft] straggler: step {step} took {dt:.3f}s "
+                            f"(median {med:.3f}s) — demoting lane {lane} from "
+                            f"forwarder duty for the next plan")
+                times.append(dt)
             step += 1
             run.steps_run += 1
             if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
@@ -106,10 +121,14 @@ def run_training(step_fn: Callable, init_state: tuple, batch_at: Callable,
             if committed is None:
                 step = 0
                 log("[ft] no committed checkpoint — restarting from scratch")
+                if cfg.on_restart is not None:
+                    cfg.on_restart(0, False)
             else:
                 (params, opt), _ = _restore(cfg.ckpt_dir, (params, opt))
                 step = committed
                 log(f"[ft] restored step {step}")
+                if cfg.on_restart is not None:
+                    cfg.on_restart(step, True)
     checkpointer.wait(pending)
     return (params, opt), run
 

@@ -8,7 +8,12 @@ Per-slot (continuous) admission would need per-row position counters in the
 decode state; recorded as future work in DESIGN.md — wave batching is what
 the serve_step dry-run cells model.
 
-Metrics: TTFT per request, decode tok/s, queue latency.
+Metrics: TTFT per request, decode tok/s, queue latency — plus, for MoE
+models with ``track_traffic=True``, per-wave expert-load statistics from the
+online traffic subsystem (``core/traffic.py``): the prefill threads an EMA
+``TrafficState`` through the MoE islands, and each wave's raw routing counts
+are reported as max/mean lane load and hot-expert share (the signal a serving
+autoscaler or re-layout policy would act on).
 """
 
 from __future__ import annotations
@@ -21,6 +26,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import relayout, traffic as traffic_lib
 
 
 @dataclasses.dataclass
@@ -36,7 +43,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, bundle, *, max_batch: int = 8, max_len: int = 256,
-                 eos_id: int | None = None, pad_id: int = 0):
+                 eos_id: int | None = None, pad_id: int = 0,
+                 track_traffic: bool = False):
         self.bundle = bundle
         self.max_batch = max_batch
         self.max_len = max_len
@@ -44,8 +52,20 @@ class ServingEngine:
         self.pad_id = pad_id
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
+        self.wave_loads: list[dict] = []
         self._next_id = 0
-        self._prefill = jax.jit(lambda p, b: bundle.prefill(p, b, max_len))
+        self.traffic = None
+        if track_traffic:
+            ctx = bundle.ctx
+            if ctx.cfg.moe is None or ctx.cfg.family != "moe":
+                raise ValueError("track_traffic requires a moe-family bundle")
+            self.traffic = traffic_lib.init_traffic_state(
+                ctx.cfg.moe.n_experts, ctx.placement.ep,
+                n_layers=ctx.cfg.n_layers)
+            self._prefill = jax.jit(
+                lambda p, b, tr: bundle.prefill(p, b, max_len, traffic=tr))
+        else:
+            self._prefill = jax.jit(lambda p, b: bundle.prefill(p, b, max_len))
         self._decode = jax.jit(
             lambda p, st, t: bundle.decode_step(p, st, t, max_len))
 
@@ -75,7 +95,12 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(toks)}
 
         t0 = time.perf_counter()
-        logits, state = self._prefill(params, batch)
+        if self.traffic is not None:
+            logits, state, self.traffic = self._prefill(params, batch,
+                                                        self.traffic)
+            self._record_wave_load()
+        else:
+            logits, state = self._prefill(params, batch)
         jax.block_until_ready(logits)
         ttft = time.perf_counter() - t0
         for r in wave:
@@ -103,13 +128,36 @@ class ServingEngine:
         self.finished.extend(wave)
         return wave
 
+    def _record_wave_load(self):
+        """Per-wave expert-load snapshot from the raw (non-EMA) counts of the
+        wave's prefill, summed over layers."""
+        counts = np.asarray(self.traffic.last_expert_count).sum(axis=0)
+        lanes = relayout.lane_loads(counts, self.bundle.ctx.placement)
+        tot = max(float(counts.sum()), 1e-9)
+        self.wave_loads.append({
+            "expert_tokens": counts,
+            "max_lane_load": float(lanes.max()),
+            "mean_lane_load": float(lanes.mean()),
+            "lane_imbalance": float(lanes.max() / max(lanes.mean(), 1e-9)),
+            "top_expert_share": float(counts.max() / tot),
+        })
+
     def stats(self) -> dict:
         done = [r for r in self.finished if r.ttft_s is not None]
         if not done:
             return {}
-        return {
+        out = {
             "requests": len(done),
             "mean_ttft_s": float(np.mean([r.ttft_s for r in done])),
             "p95_ttft_s": float(np.percentile([r.ttft_s for r in done], 95)),
             "mean_tokens": float(np.mean([len(r.output) for r in done])),
         }
+        if self.wave_loads:
+            out["waves"] = len(self.wave_loads)
+            out["mean_lane_imbalance"] = float(
+                np.mean([w["lane_imbalance"] for w in self.wave_loads]))
+            out["max_lane_imbalance"] = float(
+                np.max([w["lane_imbalance"] for w in self.wave_loads]))
+            out["mean_top_expert_share"] = float(
+                np.mean([w["top_expert_share"] for w in self.wave_loads]))
+        return out

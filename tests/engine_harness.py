@@ -25,13 +25,20 @@ def conformance_spec(engine: str, *, mesh=(("model", 8),), node_sizes=(2, 4),
                      d: int = 32, f: int = 48, caps_exact=(8.0,),
                      caps_pressure=(0.5,), balancers=(True, False),
                      engine_kwargs_grid=({},), tol: float = 1e-3,
-                     dtype: str = "float32", seed: int = 0) -> dict:
+                     dtype: str = "float32", seed: int = 0,
+                     placement: dict | None = None) -> dict:
     """Build a spec dict; defaults cover the standard single-pod 8-lane grid.
 
     ``dtype`` names the input/weight dtype ("float32" or "bfloat16"); bf16
     rows should come with a correspondingly looser ``tol`` (the oracle runs
     at the same precision, but rounding orders differ between the engines'
     scatter-add and the per-token dense sum).
+
+    ``placement``: None for the arithmetic ``ExpertPlacement``; a dict like
+    ``{"slots_per_lane": 2, "zipf": 1.0}`` builds a table-driven placement
+    via the load-adaptive re-layout solver on a deterministic zipf load —
+    when ``ep * slots_per_lane > n_experts`` the hottest experts come back
+    replicated (the non-trivial table the acceptance criteria demand).
     """
     return {
         "engine": engine,
@@ -44,6 +51,7 @@ def conformance_spec(engine: str, *, mesh=(("model", 8),), node_sizes=(2, 4),
         "balancers": list(balancers),
         "engine_kwargs_grid": [dict(kw) for kw in engine_kwargs_grid],
         "tol": tol, "dtype": dtype, "seed": seed,
+        "placement": dict(placement) if placement else None,
     }
 
 
@@ -100,6 +108,23 @@ def _spec_env(spec):
     return spec, mesh, ep, ep_axis, ep_spec, (x, wr, w1, w3, w2)
 
 
+def _make_placement(spec, ep, node_size):
+    """ExpertPlacement by default; spec["placement"] builds a table-driven
+    placement from the re-layout solver on a deterministic zipf load."""
+    from repro.core.routing import ExpertPlacement
+
+    p = spec.get("placement")
+    e = spec["n_experts"]
+    if not p:
+        return ExpertPlacement(n_experts=e, ep=ep, node_size=node_size)
+    import numpy as np
+
+    from repro.core.relayout import solve_placement
+    loads = 1.0 / np.arange(1, e + 1) ** p.get("zipf", 1.0)
+    return solve_placement(loads, ep=ep, node_size=node_size,
+                           slots_per_lane=p["slots_per_lane"])
+
+
 def _grid_cells(spec):
     """The common conformance grid: one cell per (node_size, balancer,
     engine-kwargs, capacity_factor, exactness).  ``exact`` cells compare
@@ -129,7 +154,6 @@ def run_conformance(spec) -> None:
     from repro.compat import shard_map
     from repro.core import fusco
     from repro.core.dcomm import DcommConfig
-    from repro.core.routing import ExpertPlacement
     from repro.layers.moe import lane_major_expert_weights
 
     spec, mesh, ep, ep_axis, ep_spec, arrs = _spec_env(spec)
@@ -148,7 +172,7 @@ def run_conformance(spec) -> None:
 
     n_cells = 0
     for node_size, balancer, ekw, (cap, exact) in _grid_cells(spec):
-        placement = ExpertPlacement(n_experts=e, ep=ep, node_size=node_size)
+        placement = _make_placement(spec, ep, node_size)
         w1l = lane_major_expert_weights(w1, placement).reshape(-1, d, f)
         w3l = lane_major_expert_weights(w3, placement).reshape(-1, d, f)
         w2l = lane_major_expert_weights(w2, placement).reshape(-1, f, d)
@@ -177,7 +201,6 @@ def run_stream_conformance(spec) -> None:
     from repro.compat import shard_map
     from repro.core import fusco
     from repro.core.dcomm import DcommConfig
-    from repro.core.routing import ExpertPlacement
     from repro.layers.moe import lane_major_expert_weights
 
     spec, mesh, ep, ep_axis, ep_spec, arrs = _spec_env(spec)
@@ -203,7 +226,7 @@ def run_stream_conformance(spec) -> None:
 
     n_cells = 0
     for node_size, balancer, ekw, (cap, exact) in _grid_cells(spec):
-        placement = ExpertPlacement(n_experts=e, ep=ep, node_size=node_size)
+        placement = _make_placement(spec, ep, node_size)
         w1l = jnp.stack([lane_major_expert_weights(w1[l], placement)
                          .reshape(-1, d, f) for l in range(n_layers)])
         w3l = jnp.stack([lane_major_expert_weights(w3[l], placement)

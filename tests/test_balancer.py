@@ -53,6 +53,30 @@ def test_algorithm1_near_optimal_small():
         assert greedy <= 1.6 * opt + 1e-6, (greedy, opt)
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 3), st.integers(2, 4), st.integers(0, 10_000),
+       st.sampled_from(["uniform", "skew_col", "skew_one"]))
+def test_algorithm1_vs_brute_force_randomized(n, m, seed, shape):
+    """Randomized grids vs the exhaustive optimum: greedy stays a valid
+    assignment and within 2x of the optimal max group load across grid
+    shapes and load distributions (uniform, per-column skew — static's
+    worst case — and a single dominating GPU)."""
+    if n == 3 and m == 4:
+        m = 3                      # keep the exhaustive oracle tractable
+    r = np.random.default_rng(seed)
+    loads = r.integers(0, 100, (n, m)).astype(np.float32)
+    if shape == "skew_col":
+        loads[:, r.integers(0, m)] += 200
+    elif shape == "skew_one":
+        loads[r.integers(0, n), r.integers(0, m)] += 500
+    a = np.asarray(algorithm1_groups(jnp.array(loads)))
+    for row in a:
+        assert sorted(row.tolist()) == list(range(m))
+    greedy = float(max_group_load(jnp.array(loads), jnp.array(a)))
+    _, opt = brute_force_assignment(loads)
+    assert greedy <= 2.0 * opt + 1e-6, (loads, greedy, opt)
+
+
 def test_spreads_hottest_gpus():
     # highest-load GPU of each node must land in a DIFFERENT group
     loads = jnp.array(_loads(4, 4, 7))

@@ -18,13 +18,22 @@ from repro.core.routing import ExpertPlacement
 
 
 @settings(max_examples=25, deadline=None)
-@given(st.integers(0, 5000), st.integers(1, 4))
-def test_ragged_descriptors_structural(seed, k):
-    """Compact wire buffer preserves slot order; offsets/sizes consistent."""
-    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+@given(st.integers(0, 5000), st.integers(1, 4),
+       st.sampled_from(["arith", "table"]))
+def test_ragged_descriptors_structural(seed, k, kind):
+    """Compact wire buffer preserves slot order; offsets/sizes consistent —
+    under the arithmetic placement AND a replicated-hot-expert table (the
+    ragged descriptors must consume arbitrary placement tables too)."""
+    if kind == "arith":
+        placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    else:
+        from repro.core.relayout import solve_placement
+        placement = solve_placement(1.0 / np.arange(1, 7), ep=4, node_size=2,
+                                    slots_per_lane=2)   # 6 experts, 8 slots
+    e = placement.n_experts
     t = 24
     key = jax.random.PRNGKey(seed)
-    A = jax.random.randint(key, (t, k), 0, 8)
+    A = jax.random.randint(key, (t, k), 0, e)
     gates = jnp.ones((t, k)) / k
     cap = 16
     plan = build_flat_plan(A, gates, placement, cap)

@@ -32,3 +32,30 @@ def test_serving_waves_complete():
         assert all(0 <= t < cfg.vocab for t in req.output)
     st = eng.stats()
     assert st["requests"] == 5 and st["mean_ttft_s"] > 0
+
+
+def test_serving_reports_per_wave_expert_load_stats():
+    """MoE bundles with track_traffic=True thread the online traffic state
+    through prefill and expose per-wave expert-load stats."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+    ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_flat")
+    bundle = zoo.build(cfg, ctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(bundle, max_batch=3, max_len=48, track_traffic=True)
+    r = np.random.default_rng(0)
+    for i in range(5):
+        eng.submit(r.integers(0, cfg.vocab, (8 + i,)), max_new=3)
+    with mesh:
+        eng.run_wave(params)
+        eng.run_wave(params)
+    assert int(eng.traffic.steps[0]) == 2        # one observation per wave
+    assert len(eng.wave_loads) == 2
+    for w in eng.wave_loads:
+        # every routed (token, k) assignment of the wave is accounted for
+        assert w["expert_tokens"].sum() > 0
+        assert w["max_lane_load"] >= w["mean_lane_load"] > 0
+        assert w["lane_imbalance"] >= 1.0
+        assert 0 < w["top_expert_share"] <= 1.0
+    st = eng.stats()
+    assert st["waves"] == 2 and st["mean_lane_imbalance"] >= 1.0

@@ -1,0 +1,267 @@
+"""Online traffic-stats subsystem: observation correctness, EMA semantics,
+the adaptive-vs-static acceptance property, overflow (dropped) accounting,
+and end-to-end threading through moe_block / the train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import dcomm, planner, relayout, traffic
+from repro.core.dcomm import DcommConfig
+from repro.core.routing import ExpertPlacement, balanced_replica_choice
+
+
+def _imbalanced(T, E, K, seed=0):
+    """The benchmarks' bimodal pattern: 80% of tokens hit 25% of experts."""
+    r = np.random.default_rng(seed)
+    hot = r.random(T) < 0.8
+    A = np.where(hot[:, None], r.integers(0, E // 4, (T, K)),
+                 r.integers(0, E, (T, K)))
+    return jnp.asarray(A, jnp.int32)
+
+
+def test_observe_counts_match_numpy():
+    E, EP, NS, T, K = 16, 8, 4, 64, 3
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=NS)
+    A = _imbalanced(T, E, K)
+    src_lane = jnp.asarray(np.random.default_rng(1).integers(0, EP, T),
+                           jnp.int32)
+    st = traffic.observe(traffic.init_traffic_state(E, EP), A, placement,
+                         src_lane, decay=0.0)        # decay 0: raw counts
+    An = np.asarray(A)
+    # per-expert counts
+    want_e = np.bincount(An.reshape(-1), minlength=E)
+    assert np.asarray(st.expert_ema).astype(int).tolist() == want_e.tolist()
+    assert np.asarray(st.last_expert_count).astype(int).tolist() == want_e.tolist()
+    # per-lane cross-node sends, node-deduplicated (hier stage-1 semantics)
+    rep = np.asarray(balanced_replica_choice(A, placement))
+    lane = np.asarray(placement.lane_of_expert(A, jnp.asarray(rep)))
+    node = lane // NS
+    want_l = np.zeros(EP, int)
+    for t in range(T):
+        my = int(src_lane[t]) // NS
+        want_l[int(src_lane[t])] += len(set(node[t]) - {my})
+    assert np.asarray(st.lane_send_ema).astype(int).tolist() == want_l.tolist()
+    assert int(st.steps) == 1
+
+
+def test_ema_decay_and_debias():
+    E, EP = 4, 2
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=1)
+    A = jnp.zeros((8, 1), jnp.int32)                 # 8 tokens -> expert 0
+    st = traffic.init_traffic_state(E, EP)
+    for _ in range(3):
+        st = traffic.observe(st, A, placement, 0, decay=0.5)
+    # EMA of a constant signal converges to it; debiasing removes warm-up
+    assert abs(float(st.expert_ema[0]) - 8 * (1 - 0.5 ** 3)) < 1e-5
+    assert abs(float(traffic.expert_loads(st, decay=0.5)[0]) - 8.0) < 1e-5
+    assert bool(traffic.has_stats(st))
+    assert not bool(traffic.has_stats(traffic.init_traffic_state(E, EP)))
+    assert traffic.balancer_loads(st, placement).shape == (2, 1)
+
+
+def test_adaptive_placement_reduces_max_lane_load_imbalanced():
+    """Acceptance: on the imbalanced routing pattern, the traffic-adaptive
+    placement reduces max-lane token load vs static — measured through the
+    stats subsystem itself (observe -> EMA loads -> solver -> lane_loads)."""
+    E, EP, NS, K = 32, 8, 4, 4
+    static = ExpertPlacement(n_experts=E, ep=EP, node_size=NS)
+    A = _imbalanced(1024, E, K)
+    src_lane = jnp.arange(1024, dtype=jnp.int32) % EP
+    st = traffic.observe(traffic.init_traffic_state(E, EP), A, static,
+                         src_lane, decay=0.5)
+    loads = np.asarray(traffic.expert_loads(st, decay=0.5))
+    adaptive = relayout.solve_placement(loads, ep=EP, node_size=NS,
+                                        slots_per_lane=E // EP)
+    mx_static = relayout.lane_loads(loads, static).max()
+    mx_adaptive = relayout.lane_loads(loads, adaptive).max()
+    # hot experts re-packed (and, with free slots, replicated) across lanes:
+    # the imbalanced pattern concentrates ~80% of traffic on the first 2
+    # lanes of the static map, so the win is large, not marginal
+    assert mx_adaptive < 0.6 * mx_static, (mx_static, mx_adaptive)
+    # and the relayout cost is observable for cadence planning
+    stats = relayout.migration_stats(static, adaptive, row_bytes=128)
+    assert stats["bytes_moved"] > 0
+
+
+def test_overflow_dropped_accounting_flat():
+    """Satellite: capacity drops are no longer silent — FlatPlan/DispatchResult
+    surface a dropped count equal to sum(max(0, count - capacity))."""
+    E, EP, NS, K, T, CAP = 16, 4, 2, 4, 64, 3
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=NS)
+    A = _imbalanced(T, E, K, seed=3)
+    gates = jnp.full((T, K), 1.0 / K)
+    plan = planner.build_flat_plan(A, gates, placement, CAP)
+    # independent count: histogram over (lane, local expert) keys
+    rep = np.asarray(balanced_replica_choice(A, placement))
+    lane = np.asarray(placement.lane_of_expert(A, jnp.asarray(rep)))
+    eloc = np.asarray(placement.local_expert_index(A, jnp.asarray(rep)))
+    key = (lane * placement.experts_per_lane + eloc).reshape(-1)
+    counts = np.bincount(key, minlength=EP * placement.experts_per_lane)
+    want = int(np.maximum(counts - CAP, 0).sum())
+    assert int(plan.dropped) == want and want > 0
+    # the count survives into the engine's DispatchResult (EP=1 in-process)
+    p1 = ExpertPlacement(n_experts=E, ep=1, node_size=1)
+    cfg = DcommConfig(engine="fused_flat", ep_axis="model", node_size=1,
+                      capacity_factor=0.25)
+    mesh = make_mesh((1,), ("model",))
+    from repro.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, 8))
+    fn = shard_map(
+        lambda xv, av, gv: dcomm.flat_dispatch(xv, av, gv, p1, cfg).dropped,
+        mesh=mesh, in_specs=(P("model"), P("model"), P("model")),
+        out_specs=P(), check_vma=False)
+    with mesh:
+        dropped = int(fn(x, A, gates))
+    cap1 = dcomm._cap(T * K / E, 0.25)
+    counts1 = np.bincount(np.asarray(A).reshape(-1), minlength=E)
+    assert dropped == int(np.maximum(counts1 - cap1, 0).sum()) and dropped > 0
+
+
+def test_overflow_dropped_accounting_hier():
+    E, EP, NS, K, T, C1 = 16, 8, 4, 4, 128, 5
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=NS)
+    A = _imbalanced(T, E, K, seed=4)
+    gates = jnp.full((T, K), 1.0 / K)
+    plan = planner.build_hier_plan(A, gates, placement, C1, jnp.int32(0))
+    counts = np.asarray(plan.slots.counts)
+    assert int(plan.dropped) == int(np.maximum(counts - C1, 0).sum())
+
+
+def test_moe_block_threads_traffic_and_relayout_migrates():
+    """End-to-end on one device: traffic state rides through lm_loss /
+    make_train_step as aux, and apply_relayout migrates weights + optimizer
+    state while keeping the loss finite and continuous."""
+    from repro.configs import get_arch
+    from repro.launch.steps import make_train_step
+    from repro.launch.train import apply_relayout
+    from repro.models import zoo
+    from repro.models.lm import make_context
+    from repro.optim import adamw
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+    ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_flat")
+    bundle = zoo.build(cfg, ctx)
+    with mesh:
+        params = bundle.init(jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=4)
+        step = jax.jit(make_train_step(bundle, opt_cfg))
+        r = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(r.integers(0, cfg.vocab, (2, 16))),
+                 "labels": jnp.asarray(r.integers(0, cfg.vocab, (2, 16)))}
+        st = traffic.init_traffic_state(cfg.moe.n_experts, ctx.placement.ep,
+                                        n_layers=cfg.n_layers)
+        params, opt, m1 = step(params, opt, batch, st)
+        st = m1.pop("traffic")
+        assert st.steps.tolist() == [1] * cfg.n_layers
+        assert float(st.expert_ema.sum()) > 0
+        params, opt, ctx2, stats = apply_relayout(params, opt, st, ctx,
+                                                  log=lambda *a, **k: None)
+        assert stats["slots"] == ctx.placement.ep * ctx.placement.experts_per_lane
+        bundle2 = zoo.build(cfg, ctx2)
+        step2 = jax.jit(make_train_step(bundle2, opt_cfg))
+        params, opt, m2 = step2(params, opt, batch, st)
+        assert np.isfinite(float(m2["loss"]))
+        # same data, placement-invariant math: loss moved only by the
+        # optimizer step, not by the migration
+        assert abs(float(m2["loss"]) - float(m1["loss"])) < 1.0
+
+
+def test_placement_history_sidecar_round_trip(tmp_path):
+    """Relayout × checkpoint consistency: the sidecar must return, for any
+    committed step, exactly the table that was active when that checkpoint's
+    params were saved."""
+    from repro.launch.train import (load_placement_history, placement_at_step,
+                                    save_placement_history)
+    E, EP, NS = 16, 8, 4
+    p0 = ExpertPlacement(n_experts=E, ep=EP, node_size=NS)  # arithmetic seed
+    loads_a = np.array([100.0] + [1.0] * (E - 1))
+    loads_b = np.array([1.0] * (E - 1) + [100.0])
+    pa = relayout.solve_placement(loads_a, ep=EP, node_size=NS, slots_per_lane=2)
+    pb = relayout.solve_placement(loads_b, ep=EP, node_size=NS, slots_per_lane=2)
+    history = [(0, p0), (4, pa), (10, pb)]
+    save_placement_history(str(tmp_path), history, NS)
+    loaded = load_placement_history(str(tmp_path), E)
+    assert [s for s, _ in loaded] == [0, 4, 10]
+    for (_, want), (_, got) in zip(history, loaded):
+        assert (relayout.placement_table(got)
+                == relayout.placement_table(want)).all()
+    for step, want in [(0, history[0][1]), (3, history[0][1]),
+                       (4, pa), (9, pa), (10, pb), (99, pb)]:
+        got = placement_at_step(loaded, step)
+        assert (relayout.placement_table(got)
+                == relayout.placement_table(want)).all(), step
+    assert load_placement_history(str(tmp_path / "missing"), E) is None
+
+
+def test_run_training_on_restart_hook(tmp_path):
+    """The fault-tolerant runtime must announce every rewind so step-index-
+    or layout-keyed state (adaptive placement) can re-base."""
+    from repro.runtime.fault_tolerance import RunConfig, run_training
+    calls = []
+    params = {"w": jnp.zeros(2)}
+    opt = {"m": jnp.zeros(2)}
+
+    def step_fn(p, o, batch):
+        return p, o, {"loss": jnp.zeros(())}
+
+    cfg = RunConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=2,
+                    inject_failure_at=3,
+                    on_restart=lambda s, restored: calls.append((s, restored)))
+    run_training(step_fn, (params, opt), lambda s: None, cfg,
+                 log=lambda *a, **k: None)
+    # failure at step 3 -> restore committed step 2
+    assert calls == [(2, True)]
+
+
+MOE_ISLAND_TRAFFIC_CODE = """
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.compat import make_mesh
+from repro.core import fusco, traffic
+from repro.core.dcomm import DcommConfig
+from repro.core.routing import ExpertPlacement
+from repro.layers.moe import moe_block, lane_major_expert_weights
+
+mesh = make_mesh((2, 4), ("data", "model"))
+E, K, D, F = 16, 2, 16, 24
+placement = ExpertPlacement(n_experts=E, ep=4, node_size=2)
+dcfg = DcommConfig(engine="fused_hier", ep_axis="model", node_size=2,
+                   capacity_factor=16.0, use_balancer=True)
+ks = jax.random.split(jax.random.PRNGKey(0), 6)
+x = jax.random.normal(ks[0], (4, 32, D))
+wr = jax.random.normal(ks[1], (D, E)) * 0.5
+w1c = jax.random.normal(ks[2], (E, D, F)) * 0.1
+w3c = jax.random.normal(ks[3], (E, D, F)) * 0.1
+w2c = jax.random.normal(ks[4], (E, F, D)) * 0.1
+mp = dict(router=wr, w1=lane_major_expert_weights(w1c, placement),
+          w3=lane_major_expert_weights(w3c, placement),
+          w2=lane_major_expert_weights(w2c, placement))
+ref = fusco.dense_moe_reference(x.reshape(-1, D), wr, w1c, w3c, w2c,
+                                K).reshape(x.shape)
+st = traffic.init_traffic_state(E, 4)
+with mesh:
+    y0 = moe_block(x, mp, mesh=mesh, placement=placement, dcfg=dcfg, top_k=K)
+    y1, st1 = moe_block(x, mp, mesh=mesh, placement=placement, dcfg=dcfg,
+                        top_k=K, traffic=st)
+# both the static grouping and the EMA-fed Algorithm 1 grouping are exact at
+# ample capacity; the traffic-threaded island must not perturb the math
+assert float(jnp.abs(y0 - ref).max()) < 1e-3
+assert float(jnp.abs(y1 - ref).max()) < 1e-3
+# island psum: the raw per-step counts cover ALL (token, k) assignments
+# across the data AND EP shards (4 x 32 tokens x K), not one shard's slice
+assert int(np.asarray(st1.last_expert_count).sum()) == 4 * 32 * K
+assert int(st1.steps) == 1
+print("ISLAND_TRAFFIC_OK")
+"""
+
+
+@pytest.mark.slow
+def test_moe_island_traffic_multidevice(multidevice):
+    out = multidevice(MOE_ISLAND_TRAFFIC_CODE, 8, timeout=900)
+    assert "ISLAND_TRAFFIC_OK" in out
