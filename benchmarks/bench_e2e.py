@@ -58,23 +58,28 @@ def bench_model(cfg):
     return out
 
 def bench_stream():
-    # the cross-layer stream A/B: same moe_ffn stack, per-layer barriers
-    # (moe_stream=0) vs 2-layer chained stream blocks (moe_stream=2).  The
-    # two compute the same function (no tail-independent boundary work in a
-    # pure MoE chain), so this measures the stream schedule's end-to-end
-    # structural cost through the full train step, not an overlap win.
+    # the cross-layer stream A/B/C: same moe_ffn stack, per-layer barriers
+    # (moe_stream=0) vs 2-layer chained stream blocks (moe_stream=2) vs the
+    # 2-way micro-batch interleaved stream (moe_interleave=2, gradient
+    # accumulation feeding the lanes).  All compute the same function, so on
+    # CPU this measures each schedule's end-to-end structural cost through
+    # the full train step; on async hardware the interleaved rows' filled
+    # boundary windows are where the overlap win lands.
     import dataclasses
     cfg = dataclasses.replace(get_arch("moe-ffn-stream").reduced(),
                               n_layers=4)
     out = {}
-    for label, stream in [("perlayer", 0), ("chained", 2)]:
+    for label, stream, interleave, accum in [
+            ("perlayer", 0, 1, 1), ("chained", 2, 1, 1),
+            ("interleaved", 2, 2, 1), ("interleaved_accum", 2, 2, 2)]:
         ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_pipe",
                            capacity_factor=2.0, node_size=2,
-                           moe_stream=stream)
+                           moe_stream=stream, moe_interleave=interleave)
         bundle = zoo.build(cfg, ctx)
         params = bundle.init(jax.random.PRNGKey(0))
         opt = adamw.init(params)
-        step = jax.jit(make_train_step(bundle, adamw.AdamWConfig()))
+        step = jax.jit(make_train_step(bundle, adamw.AdamWConfig(),
+                                       accum=accum))
         batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, 64)
         with mesh:
             p, o, m = step(params, opt, batch)
@@ -105,4 +110,9 @@ def run() -> list[tuple[str, float, str]]:
     stream = res["moe_ffn_stream"]
     rows.append(("e2e/moe_ffn_stream/train_schedule_overhead",
                  stream["train_perlayer"] / stream["train_chained"], "x"))
+    rows.append(("e2e/moe_ffn_stream/train_interleave_overhead",
+                 stream["train_chained"] / stream["train_interleaved"], "x"))
+    rows.append(("e2e/moe_ffn_stream/train_accum_fused_vs_unit_batch",
+                 stream["train_interleaved"]
+                 / stream["train_interleaved_accum"], "x"))
     return rows

@@ -17,8 +17,8 @@ def main() -> None:
                     help="comma-separated subset: traffic,ablation,breakdown,e2e")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated token counts per lane for the "
-                         "suites that take sizes (traffic, ablation) — "
-                         "e.g. --sizes 64 for the CI smoke run")
+                         "suites that take sizes (traffic, ablation, "
+                         "pipeline) — e.g. --sizes 64 for the CI smoke run")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes else None)
 
@@ -41,7 +41,7 @@ def main() -> None:
         try:
             if sizes is not None and name == "traffic":
                 rows = mod.run(sizes=tuple(sizes))
-            elif sizes is not None and name == "ablation":
+            elif sizes is not None and name in ("ablation", "pipeline"):
                 rows = mod.run(t=sizes[-1])
             else:
                 rows = mod.run()

@@ -12,7 +12,10 @@ quick pass.)
 of N consecutive MoE layers fused into one cross-layer pipelined stream
 (fused_pipe engine: the combine of layer i overlaps the dispatch of layer
 i+1).  ``--stream 1`` is the same model with per-layer barriers — the pair
-is the end-to-end A/B for the stream path.
+is the end-to-end A/B for the stream path.  ``--interleave K`` additionally
+round-robins K token micro-batches through each stream block (micro-batch
+j+1's router/FFN fills micro-batch j's boundary window) and feeds the
+gradient-accumulation micro-batches through those lanes (``--accum K``).
 """
 
 import os
@@ -51,7 +54,13 @@ def main():
                     help="layers per cross-layer stream block (moe_ffn "
                          "stack, fused_pipe engine); 0 = the attention MoE "
                          "with fused_hier")
+    ap.add_argument("--interleave", type=int, default=1,
+                    help="token micro-batches interleaved through each "
+                         "stream block (needs --stream; doubles as the "
+                         "gradient-accumulation factor)")
     args = ap.parse_args()
+    if args.interleave > 1 and not args.stream:
+        ap.error("--interleave requires --stream")
     arch = MOE_FFN_100M if args.stream else MOE_100M
 
     # register the example config under a temporary name
@@ -70,6 +79,9 @@ def main():
     extra = []
     if args.stream:
         extra = ["--moe-stream", str(args.stream)]
+    if args.interleave > 1:
+        extra += ["--moe-interleave", str(args.interleave),
+                  "--accum", str(args.interleave)]
     train_mod.main([
         "--arch", "moe-100m",
         "--engine", "fused_pipe" if args.stream else "fused_hier",

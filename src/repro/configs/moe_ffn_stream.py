@@ -4,10 +4,12 @@ Consecutive MoE layers with nothing between them are exactly the shape the
 cross-layer pipelined stream targets (combine of layer i overlapping the
 dispatch of layer i+1, MegaScale-MoE style): run with
 ``--engine fused_pipe --moe-stream <block>`` to fuse blocks of layers into
-one shard_map island (``layers/moe.stream_moe_layers``), or with
-``--moe-stream 0`` for the per-layer-barrier baseline the benchmarks compare
-against.  Not one of the assigned archs (excluded from ARCH_IDS, like
-deepseek-v3-bench).
+one shard_map island (``layers/moe.stream_moe_layers``), add
+``--moe-interleave K`` (+ ``--accum K``) to round-robin K token micro-batches
+through each block so micro-batch j+1's compute fills micro-batch j's
+boundary window, or use ``--moe-stream 0`` for the per-layer-barrier baseline
+the benchmarks compare against.  Not one of the assigned archs (excluded from
+ARCH_IDS, like deepseek-v3-bench).
 """
 
 from repro.configs.base import ArchConfig, MoESpec

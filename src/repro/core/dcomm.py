@@ -33,10 +33,17 @@ fused_pipe    1          capacity   **yes**     Same flat plan, but the staging 
                                                 combine of MoE layer i and the
                                                 dispatch of layer i+1 (joint slice
                                                 count from
-                                                ``pipesim.plan_layer_stream``; see
-                                                its honesty note on when the
-                                                boundary window is actually
-                                                fillable).
+                                                ``pipesim.plan_layer_stream``), and
+                                                how ``fusco.interleaved_layer_
+                                                stream`` round-robins K token
+                                                micro-batches through one schedule
+                                                holding K tails in flight — lane
+                                                j+1's router + grouped FFN is the
+                                                tail-independent work that FILLS
+                                                lane j's boundary window (count
+                                                from ``pipesim.plan_interleaved_
+                                                stream``).  Still open: a K=1 pure
+                                                MoE chain leaves the window empty.
 fused_hier    2          capacity   no          Node-level forwarding with dedup (one
                                                 copy per token per destination node,
                                                 forwarder lane picked by the Online
@@ -219,15 +226,18 @@ def flat_combine(expert_out: jax.Array, res: DispatchResult,
 
 def pipe_geometry(t: int, k: int, d: int, itemsize: int,
                   placement: ExpertPlacement, cfg: DcommConfig,
-                  n_layers: int = 1) -> tuple[int, int]:
+                  n_layers: int = 1, interleave: int = 1) -> tuple[int, int]:
     """(capacity, n_slices) for a pipelined shuffle — static trace-time plan.
 
-    S is ``cfg.pipe_slices`` when set; else the pipesim knee for the staging
-    buffer's byte volume at the config's hardware point (the *joint*
-    cross-layer knee from :func:`pipesim.plan_layer_stream` when the shuffle
-    is one layer of an ``n_layers`` stream), clamped so every slice keeps at
-    least one row per (lane, expert) sub-slot.  Capacity is rounded up to a
-    multiple of S.
+    ``t`` is the tokens of ONE shuffle (one micro-batch lane when the caller
+    interleaves).  S is ``cfg.pipe_slices`` when set; else the pipesim knee
+    for the staging buffer's byte volume at the config's hardware point: the
+    *joint* cross-layer knee from :func:`pipesim.plan_layer_stream` when the
+    shuffle is one layer of an ``n_layers`` stream, and the interleaved-
+    schedule knee from :func:`pipesim.plan_interleaved_stream` (full-layer
+    payload = ``interleave`` lanes) when micro-batches are interleaved
+    through it.  Clamped so every slice keeps at least one row per
+    (lane, expert) sub-slot; capacity is rounded up to a multiple of S.
     """
     e_local = placement.experts_per_lane
     cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
@@ -239,7 +249,11 @@ def pipe_geometry(t: int, k: int, d: int, itemsize: int,
                                stage_bw=cfg.pipe_stage_bw,
                                wire_bw=cfg.pipe_wire_bw,
                                per_slice_overhead_s=cfg.pipe_overhead_s)
-        if n_layers > 1:
+        if interleave > 1:
+            s = pipesim.plan_interleaved_stream(
+                p, max(1, n_layers), interleave,
+                payload_bytes=payload * interleave)["n_slices"]
+        elif n_layers > 1:
             s = pipesim.plan_layer_stream(p, n_layers)["n_slices"]
         else:
             s = pipesim.plan_slices(p)["n_slices"]
@@ -311,8 +325,12 @@ class PipeTail(NamedTuple):
     landed.  Carrying it across a layer boundary removes the per-layer
     *program* barrier in the cross-layer stream — the boundary becomes one
     async-ready exchange instead of a materialised layer output.  The window
-    it opens is only *filled* when the schedule has tail-independent work to
-    co-locate there (see the honesty note on ``fusco.pipe_layer_stream``).
+    it opens is filled whenever the schedule co-locates tail-independent work
+    there: ``fusco.interleaved_layer_stream`` holds K of these in flight (one
+    per token micro-batch lane, stacked on a leading axis in the layer-scan
+    carry) and fills lane j's window with lane j+1's router + FFN compute.
+    A plain K=1 ``fusco.pipe_layer_stream`` keeps the structure but leaves
+    the window empty (a pure MoE chain has no such work of its own).
     """
     returned: jax.Array        # (EP*E_local*Cs, d) reverse-exchanged outputs
     src: jax.Array             # (EP, E_local, Cs) origin token per slot
@@ -327,6 +345,14 @@ def pipe_empty_tail(placement: ExpertPlacement, cs: int, d: int,
     return PipeTail(jnp.zeros((ep * e_local * cs, d), dtype),
                     jnp.full((ep, e_local, cs), -1, I32),
                     jnp.zeros((ep, e_local, cs), gate_dtype))
+
+
+def pipe_empty_tails(placement: ExpertPlacement, cs: int, d: int, dtype,
+                     gate_dtype, k: int) -> PipeTail:
+    """K stacked no-op tails (leading axis = micro-batch lane): the initial
+    carry of the interleaved stream, one in-flight queue entry per lane."""
+    one = pipe_empty_tail(placement, cs, d, dtype, gate_dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (k,) + a.shape), one)
 
 
 def pipe_tail_consume(y: jax.Array, tail: PipeTail, t: int) -> jax.Array:

@@ -8,10 +8,14 @@ original token layout.  Engine choice, hierarchy and balancer are config.
 
 Also provides :func:`dense_moe_reference` — the per-token dense oracle used by
 tests to validate every engine bit-for-bit (up to dtype tolerance) — and the
-cross-layer stream API :func:`pipe_layer_stream` / :func:`layer_stream`:
-N consecutive MoE layers chained through one pipelined schedule where the
-combine of layer i overlaps the dispatch of layer i+1 (MegaScale-MoE-style),
-with :func:`stream_dense_reference` as its stacked dense oracle.
+cross-layer stream API :func:`pipe_layer_stream` / :func:`layer_stream` /
+:func:`interleaved_layer_stream`: N consecutive MoE layers chained through one
+pipelined schedule where the combine of layer i overlaps the dispatch of
+layer i+1 (MegaScale-MoE-style), optionally with K token micro-batches
+interleaved round-robin through it so micro-batch j+1's router + expert FFN
+fills micro-batch j's boundary window.  :func:`stream_dense_reference` is the
+stacked dense oracle for both (the stream is order-preserving per token, so
+the oracle is interleave-invariant).
 """
 
 from __future__ import annotations
@@ -133,7 +137,7 @@ def pipe_layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,
                       w3: jax.Array, w2: jax.Array,
                       placement: ExpertPlacement, cfg: DcommConfig,
                       top_k: int, ln: jax.Array | None = None,
-                      norm_topk: bool = True) -> jax.Array:
+                      norm_topk: bool = True, traffic=None, observe=None):
     """Chain N consecutive MoE layers through ONE pipelined schedule.
 
     ``w_router``: (N, d, E) replicated; ``w1``/``w3``: (N, E_local, d, f) and
@@ -154,15 +158,27 @@ def pipe_layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,
       * each layer's residual seeds the accumulator directly (``y0=h``),
         fusing the residual add into the combine scatter-add.
 
-    Honesty note on overlap: in this *pure* MoE chain, layer l+1's router
-    reads the completed ``h``, so the deferred tail has no tail-independent
-    compute to hide behind at the boundary — the dependency chain equals the
-    barrier path's, and XLA cannot overlap the boundary exchange with
-    anything *inside this function*.  The MegaScale-MoE win materialises
-    when the window holds independent work: co-scheduled non-MoE compute
-    (attention between MoE layers) or a second token micro-batch interleaved
-    through the same stream — both open items in ROADMAP.md.  ``PipeTail``
-    is the structure that makes such co-scheduling expressible at all.
+    Overlap status: in this K=1 *pure* MoE chain, layer l+1's router reads
+    the completed ``h``, so the deferred tail has no tail-independent
+    compute to hide behind at the boundary — the structure alone does not
+    fill the window.  The filled version is
+    :func:`interleaved_layer_stream`: K>=2 token micro-batches round-robin
+    through the same schedule, micro-batch j+1's router + grouped FFN
+    landing exactly in micro-batch j's boundary window
+    (``pipesim.simulate_interleaved_stream`` quantifies the bubble-fraction
+    reduction).  Still open: streaming through attention-separated MoE
+    layers (the island must own the attention collectives) and the
+    linear-router trick (router logits are linear in ``h``, so at
+    ``ln=None`` partial-accumulator logits plus a tail-delta correction
+    would let routing start before the tail lands) — see ROADMAP.md.
+
+    ``traffic``: optional per-layer stacked ``traffic.TrafficState``
+    (leading ``(N,)`` dim) riding the layer scan as xs, each layer's slice
+    folded via ``observe(state, A)`` (a caller-built closure over placement /
+    lane / psum axes — keeps the traffic subsystem out of the engine core)
+    and returned updated as ys.  With it the function returns
+    ``(h, new_traffic)`` instead of ``h`` — this is what lets the
+    load-adaptive re-layout act on the stream family too.
 
     Runs inside shard_map over the EP axis/axes, like every engine entry
     point.  Gradient-parity with :func:`stream_dense_reference` is covered by
@@ -178,42 +194,148 @@ def pipe_layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,
     cfg = dataclasses.replace(cfg, pipe_slices=s)     # freeze the joint plan
     cs = cap // s
 
-    def layer(carry, lp):
+    def layer(carry, xs):
+        lp, tr = xs if traffic is not None else (xs, None)
         h, tail = carry
         h = dcomm.pipe_tail_consume(h, tail, t)       # land layer l-1's tail
         u, A, gates = _stream_layer_io(h, lp, top_k, norm_topk)
+        if tr is not None:
+            tr = observe(tr, A)
         ffn = lambda rows: swiglu_experts(rows, lp["w1"], lp["w3"], lp["w2"])
         y, tail = dcomm.pipe_shuffle_ffn_stream(u, A, gates, ffn, placement,
                                                 cfg, y0=h)    # residual seed
-        return (y, tail), None
+        return (y, tail), tr
 
+    lps = _stack_stream_params(w_router, w1, w3, w2, ln)
     tail0 = dcomm.pipe_empty_tail(placement, cs, d, x.dtype, x.dtype)
-    (h, tail), _ = jax.lax.scan(
-        layer, (x, tail0), _stack_stream_params(w_router, w1, w3, w2, ln))
-    return dcomm.pipe_tail_consume(h, tail, t)        # epilogue: last tail
+    (h, tail), new_traffic = jax.lax.scan(
+        layer, (x, tail0), lps if traffic is None else (lps, traffic))
+    h = dcomm.pipe_tail_consume(h, tail, t)           # epilogue: last tail
+    return h if traffic is None else (h, new_traffic)
+
+
+def interleaved_layer_stream(x: jax.Array, w_router: jax.Array,
+                             w1: jax.Array, w3: jax.Array, w2: jax.Array,
+                             placement: ExpertPlacement, cfg: DcommConfig,
+                             top_k: int, ln: jax.Array | None = None,
+                             norm_topk: bool = True, interleave: int = 2,
+                             traffic=None, observe=None):
+    """K token micro-batches round-robin through ONE cross-layer schedule.
+
+    ``x`` (t, d) is split into ``interleave`` contiguous micro-batch lanes of
+    t/K tokens; per layer, lane j's shuffle (router → sliced dispatch/FFN →
+    tail combine issued) is followed by lane j+1's, and lane j's deferred
+    tail (:class:`dcomm.PipeTail`) lands only in lane j's next-layer
+    prologue.  That turns the structural window :func:`pipe_layer_stream`
+    opens into a *filled* one: while lane j's tail combine exchange is on
+    the wire, lanes j+1..K-1 run router + grouped FFN — tail-independent
+    compute with no data dependence on the in-flight exchange, which XLA's
+    async collectives (TPU) can therefore overlap.  K tails ride the layer
+    scan carry stacked on a leading lane axis; weights are shared across
+    lanes (same layer), so the scan still compiles one layer body.
+
+    Capacity and the slice count are planned per LANE (t/K tokens) with the
+    schedule-aware knee from ``pipesim.plan_interleaved_stream``; all lanes
+    and layers share one static slice geometry so every carried tail has the
+    same shape.  K=2 already suffices on paper-scale geometries: one lane's
+    FFN + router time exceeds the tail exchange time (DESIGN.md
+    §stream-interleave), and larger K only adds per-slice overhead.
+
+    The result is bit-identical (up to scatter-add rounding) to
+    :func:`pipe_layer_stream` on the same ``x``, because lanes never
+    interact — the oracle is the same :func:`stream_dense_reference`.
+    ``interleave=1`` degenerates to exactly :func:`pipe_layer_stream`.
+
+    ``traffic``/``observe``: as in :func:`pipe_layer_stream`; each layer
+    folds ONE observation covering all K lanes' routing (the lanes' token-
+    expert matrices concatenated), so the EMA semantics match the
+    non-interleaved stream step for step.
+    """
+    if cfg.engine != "fused_pipe":
+        raise ValueError(
+            "interleaved_layer_stream requires engine='fused_pipe', "
+            f"got {cfg.engine!r}")
+    kk = max(1, int(interleave))
+    t, d = x.shape
+    if t % kk != 0:
+        raise ValueError(
+            f"interleave={kk} must divide the island's {t} tokens "
+            "(micro-batch lanes need identical static shapes)")
+    tc = t // kk
+    n_layers = w_router.shape[0]
+    cap, s = dcomm.pipe_geometry(tc, top_k, d, x.dtype.itemsize, placement,
+                                 cfg, n_layers=n_layers, interleave=kk)
+    cfg = dataclasses.replace(cfg, pipe_slices=s)     # freeze the joint plan
+    cs = cap // s
+
+    def layer(carry, xs):
+        lp, tr = xs if traffic is not None else (xs, None)
+        hs, tails = carry
+        ffn = lambda rows: swiglu_experts(rows, lp["w1"], lp["w3"], lp["w2"])
+        new_h, new_tails, As = [], [], []
+        for j in range(kk):               # round-robin over micro-batch lanes
+            tail = jax.tree.map(lambda a, j=j: a[j], tails)
+            h = dcomm.pipe_tail_consume(hs[j], tail, tc)   # lane j's prologue
+            u, A, gates = _stream_layer_io(h, lp, top_k, norm_topk)
+            y, tail = dcomm.pipe_shuffle_ffn_stream(u, A, gates, ffn,
+                                                    placement, cfg, y0=h)
+            new_h.append(y)
+            new_tails.append(tail)
+            As.append(A)
+        if tr is not None:
+            tr = observe(tr, jnp.concatenate(As, axis=0))
+        return ((jnp.stack(new_h),
+                 jax.tree.map(lambda *a: jnp.stack(a), *new_tails)), tr)
+
+    tails0 = dcomm.pipe_empty_tails(placement, cs, d, x.dtype, x.dtype, kk)
+    lps = _stack_stream_params(w_router, w1, w3, w2, ln)
+    (hs, tails), new_traffic = jax.lax.scan(
+        layer, (x.reshape(kk, tc, d), tails0),
+        lps if traffic is None else (lps, traffic))
+    # epilogue: land every lane's final tail
+    outs = [dcomm.pipe_tail_consume(hs[j],
+                                    jax.tree.map(lambda a, j=j: a[j], tails),
+                                    tc)
+            for j in range(kk)]
+    h = jnp.concatenate(outs, axis=0)
+    return h if traffic is None else (h, new_traffic)
 
 
 def layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,
                  w3: jax.Array, w2: jax.Array, placement: ExpertPlacement,
                  cfg: DcommConfig, top_k: int, ln: jax.Array | None = None,
-                 norm_topk: bool = True, stream: bool = True) -> jax.Array:
+                 norm_topk: bool = True, stream: bool = True,
+                 interleave: int = 1, traffic=None, observe=None):
     """Stream dispatch table: the cross-layer pipelined schedule when the
-    engine supports it, else the per-layer-barrier fallback (each layer a
-    full :func:`shuffle_ffn`, any engine).  Same layout contract and result
-    as :func:`pipe_layer_stream`."""
+    engine supports it (micro-batch interleaved for ``interleave >= 2``),
+    else the per-layer-barrier fallback (each layer a full
+    :func:`shuffle_ffn`, any engine; interleaving is a property of the
+    pipelined schedule, so the fallback ignores it).  Same layout contract
+    and result as :func:`pipe_layer_stream`, including the optional
+    ``traffic``/``observe`` threading."""
     if stream and cfg.engine == "fused_pipe":
+        if interleave > 1:
+            return interleaved_layer_stream(
+                x, w_router, w1, w3, w2, placement, cfg, top_k, ln=ln,
+                norm_topk=norm_topk, interleave=interleave, traffic=traffic,
+                observe=observe)
         return pipe_layer_stream(x, w_router, w1, w3, w2, placement, cfg,
-                                 top_k, ln=ln, norm_topk=norm_topk)
+                                 top_k, ln=ln, norm_topk=norm_topk,
+                                 traffic=traffic, observe=observe)
 
-    def layer(h, lp):
+    def layer(h, xs):
+        lp, tr = xs if traffic is not None else (xs, None)
         u, A, gates = _stream_layer_io(h, lp, top_k, norm_topk)
+        if tr is not None:
+            tr = observe(tr, A)
         y = shuffle_ffn(u, A, gates, lp["w1"], lp["w3"], lp["w2"], placement,
                         cfg)
-        return h + y, None
+        return h + y, tr
 
-    h, _ = jax.lax.scan(layer, x,
-                        _stack_stream_params(w_router, w1, w3, w2, ln))
-    return h
+    lps = _stack_stream_params(w_router, w1, w3, w2, ln)
+    h, new_traffic = jax.lax.scan(layer, x,
+                                  lps if traffic is None else (lps, traffic))
+    return h if traffic is None else (h, new_traffic)
 
 
 def stream_dense_reference(x: jax.Array, w_router: jax.Array,

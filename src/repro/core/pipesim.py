@@ -10,10 +10,15 @@ plays the NIC role):
   2. when wire time per slice ≥ staging time, staging is fully hidden —
      total ≈ setup + first-slice staging + wire time.
 
-This simulator backs two consumers: ``benchmarks/bench_pipeline.py`` sweeps
-slice sizes at the paper's hardware constants and reports the knee, and the
-real ``fused_pipe`` engine (``dcomm.pipe_*``) calls :func:`plan_slices` at
-trace time to choose how many capacity-axis slices to stream a shuffle as.
+This simulator backs three consumers: ``benchmarks/bench_pipeline.py`` sweeps
+slice sizes at the paper's hardware constants and reports the knee; the real
+``fused_pipe`` engine (``dcomm.pipe_*``) calls :func:`plan_slices` at trace
+time to choose how many capacity-axis slices to stream a shuffle as; and the
+cross-layer schedules call :func:`plan_layer_stream` /
+:func:`plan_interleaved_stream` for the joint (all layers, all micro-batch
+lanes) slice count.  :func:`simulate_interleaved_stream` additionally models
+the *boundary bubble*: the compute idle while a layer's deferred tail combine
+is on the wire, which micro-batch interleaving fills and a K=1 chain cannot.
 """
 
 from __future__ import annotations
@@ -135,9 +140,11 @@ def simulate_layer_stream(p: PipeParams, slice_bytes: float,
     This is the BEST-CASE window of the structure the cross-layer engine
     exposes (``dcomm.pipe_shuffle_ffn_stream`` deferring the tail scatter-add
     into the next layer's prologue): realising it requires tail-independent
-    work co-scheduled at the boundary — a pure serial MoE chain has none
-    (see the honesty note on ``fusco.pipe_layer_stream``), interleaved
-    micro-batches or inter-layer attention do.
+    work co-scheduled at the boundary.  A pure serial MoE chain has none;
+    interleaved token micro-batches do (now landed —
+    ``fusco.interleaved_layer_stream``, modelled with its schedule-level
+    bubble accounting by :func:`simulate_interleaved_stream`), and
+    inter-layer attention would too (still open, ROADMAP.md).
     """
     per = simulate(p, slice_bytes)
     stage_t = slice_bytes / p.stage_bw + p.per_slice_overhead_s
@@ -176,3 +183,111 @@ def plan_layer_stream(p: PipeParams, n_layers: int,
     best = _knee([simulate_layer_stream(p, sz, n_layers)
                   for sz in _geometric_sizes()])
     return _with_slice_count(p, best, max_slices)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batch interleaved stream (K micro-batches round-robin through one
+# chained schedule: lane j+1's compute fills lane j's boundary window)
+# ---------------------------------------------------------------------------
+
+def simulate_interleaved_stream(p: PipeParams, n_slices: int, n_layers: int,
+                                interleave: int = 1) -> dict:
+    """Event model of the micro-batch interleaved cross-layer stream.
+
+    Models the schedule ``fusco.interleaved_layer_stream`` runs: the token
+    batch is split into ``interleave`` micro-batch lanes of
+    ``payload_bytes / interleave`` per layer each, issued round-robin through
+    ONE chained schedule — per layer, lane j's shuffle (``n_slices`` staged +
+    exchanged slices, tail combine exchange issued) is followed by lane
+    j+1's shuffle, and lane j's deferred tail lands only when lane j reaches
+    the next layer.  Two serially reused resources: *compute* (descriptor
+    gather + grouped FFN staging) and *wire*.  Lane j's first stage op of
+    layer l+1 (its router) must wait for lane j's layer-l tail; every OTHER
+    lane's compute is tail-independent and can fill that window.  With
+    ``interleave=1`` this IS the chained schedule of the plain layer stream,
+    whose boundary window holds no independent work (the pure-MoE-chain
+    bubble): comparing K>=2 against K=1 *at equal slice counts* quantifies
+    exactly what interleaving buys.
+
+    Reported bubbles:
+
+      * ``bubble_fraction`` — total compute idle / makespan (includes
+        in-pipeline ring stalls, which exist at any K);
+      * ``boundary_bubble_fraction`` — compute idle attributable
+        specifically to waiting on a deferred tail (the ``s==0`` router
+        stall) plus the final tail drain, / makespan.  This is the boundary
+        window itself; interleaving shrinks it, slicing alone cannot.
+
+    Per-lane slices are ``payload/(K*n_slices)`` bytes, so K>1 pays more
+    per-slice overhead for the same bytes — the model is honest about the
+    trade the engine makes.
+    """
+    k = max(1, int(interleave))
+    n = max(1, int(n_slices))
+    slice_bytes = p.payload_bytes / (k * n)
+    stage_t = slice_bytes / p.stage_bw + p.per_slice_overhead_s
+    wire_t = slice_bytes / p.wire_bw
+
+    t_comp = 0.0                       # compute resource frontier
+    t_wire = 0.0                       # wire resource frontier
+    tail_done = [0.0] * k              # per-lane: previous layer's tail landed
+    boundary_stall = 0.0
+    for _layer in range(n_layers):
+        for j in range(k):
+            wire_done = [0.0] * n
+            for s in range(n):
+                start = t_comp
+                if s == 0:             # router reads the completed h: wait
+                    start = max(start, tail_done[j])
+                    boundary_stall += start - t_comp
+                if s >= p.ring_slots:  # bounded ring, as in simulate()
+                    start = max(start, wire_done[s - p.ring_slots])
+                t_comp = start + stage_t
+                t_wire = max(t_wire, t_comp) + wire_t      # dispatch exchange
+                wire_done[s] = t_wire
+            t_wire = max(t_wire, t_comp) + wire_t          # tail combine
+            tail_done[j] = t_wire
+    makespan = max(t_comp, max(tail_done))
+    boundary_stall += makespan - t_comp                    # final tail drain
+    busy = n_layers * k * n * stage_t
+    out = {
+        "n_layers": n_layers,
+        "interleave": k,
+        "n_slices": n,
+        "slice_bytes": slice_bytes,
+        "total_s": makespan,
+        "compute_busy_s": busy,
+        "bubble_fraction": (makespan - busy) / makespan,
+        "boundary_stall_s": boundary_stall,
+        "boundary_bubble_fraction": boundary_stall / makespan,
+        "wire_bound_s": n_layers * p.payload_bytes / p.wire_bw,
+        "efficiency": (n_layers * p.payload_bytes / p.wire_bw) / makespan,
+    }
+    if k > 1:
+        chained = simulate_interleaved_stream(p, n, n_layers, 1)
+        out["speedup_vs_chained"] = chained["total_s"] / makespan
+        out["boundary_bubble_reduction"] = (
+            chained["boundary_bubble_fraction"] - out["boundary_bubble_fraction"])
+    return out
+
+
+def plan_interleaved_stream(p: PipeParams, n_layers: int, interleave: int,
+                            payload_bytes: float | None = None,
+                            max_slices: int | None = None) -> dict:
+    """Joint slice plan for the interleaved stream: ONE static slice count
+    shared by every (layer, micro-batch lane) shuffle.
+
+    ``payload_bytes`` is the FULL per-layer payload (all K micro-batches);
+    each lane stages ``payload/K``.  Sweeps slice *counts* directly (the
+    statically-shaped engine's knob) and picks the makespan knee — more
+    slices pipeline better within a lane but pay K× the per-slice overhead.
+    """
+    if payload_bytes is not None:
+        p = dataclasses.replace(p, payload_bytes=float(payload_bytes))
+    counts = [1 << i for i in range(11)]
+    if max_slices is not None:
+        counts = [n for n in counts if n <= max_slices] or [1]
+    best = min((simulate_interleaved_stream(p, n, n_layers, interleave)
+                for n in counts),
+               key=lambda r: (round(r["total_s"], 12), r["n_slices"]))
+    return best

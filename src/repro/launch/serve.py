@@ -26,14 +26,24 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--moe-stream", type=int, default=0,
+                    help="moe_ffn family: layers per cross-layer stream block")
+    ap.add_argument("--moe-interleave", type=int, default=1,
+                    help="moe_ffn family: prefill requests interleaved as "
+                         "micro-batch lanes through each stream block (must "
+                         "divide --requests)")
     args = ap.parse_args(argv)
+    if args.requests % max(1, args.moe_interleave) != 0:
+        ap.error("--moe-interleave must divide --requests")
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh()
     ctx = make_context(cfg, mesh, multi_pod=False, engine=args.engine,
-                       node_size=max(1, mesh.shape["model"] // 2))
+                       node_size=max(1, mesh.shape["model"] // 2),
+                       moe_stream=args.moe_stream,
+                       moe_interleave=args.moe_interleave)
     bundle = zoo.build(cfg, ctx)
     key = jax.random.PRNGKey(0)
     max_len = args.prompt_len + args.gen

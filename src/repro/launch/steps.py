@@ -44,14 +44,40 @@ def decode_batch_specs(cfg: ArchConfig, shape: ShapeConfig, ctx: ModelContext):
     return dp
 
 
+def accum_fuses_into_stream(bundle: zoo.ModelBundle, accum: int) -> bool:
+    """True when the gradient-accumulation micro-batches can feed the
+    interleaved layer stream's lanes instead of a serial scan: a ``moe_ffn``
+    stack on the ``fused_pipe`` engine (the only schedule that actually
+    interleaves — the barrier fallback ignores the lane split) whose
+    ``moe_interleave`` equals ``accum``."""
+    ctx = bundle.ctx
+    return (accum > 1 and bundle.cfg.family == "moe_ffn"
+            and getattr(ctx, "dcfg", None) is not None
+            and ctx.dcfg.engine == "fused_pipe"
+            and getattr(ctx, "moe_interleave", 1) == accum)
+
+
 def make_train_step(bundle: zoo.ModelBundle, opt_cfg: adamw.AdamWConfig,
                     accum: int = 1):
     """``accum > 1`` splits the global batch into microbatches (gradient
     accumulation) — activation temps shrink ~1/accum at the same global
-    batch, the lever that fits mixtral-class models in 16 GB/chip."""
+    batch, the lever that fits mixtral-class models in 16 GB/chip.
+
+    Interleaved-stream composition: when the bundle's stream interleaves K
+    micro-batches matching ``accum`` (:func:`accum_fuses_into_stream`), the
+    serial microbatch scan is skipped entirely — the whole batch goes
+    through ONE loss call and the stream itself pipelines the
+    accumulation micro-batches as its interleave lanes (lane j+1's compute
+    filling lane j's boundary window), instead of a scan whose per-micro
+    barrier is exactly the bubble the stream removes.  Equivalent to serial
+    accumulation up to the CE denominators: token-mean over the joint batch
+    vs mean of per-micro token-means — identical whenever the micro-batches
+    carry equal valid-token counts.
+    """
+    fused_accum = accum_fuses_into_stream(bundle, accum)
 
     def train_step(params, opt_state, batch, traffic=None):
-        if accum == 1:
+        if accum == 1 or fused_accum:
             if traffic is None:
                 (loss, metrics), grads = jax.value_and_grad(
                     bundle.loss, has_aux=True)(params, batch)

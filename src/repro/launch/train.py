@@ -22,6 +22,7 @@ from repro.configs import get_arch
 from repro.core import relayout, traffic as traffic_lib
 from repro.data.pipeline import ShardedLoader, SyntheticLM, ZipfNgramLM
 from repro.launch.mesh import make_host_mesh
+from repro.launch import steps as steps_mod
 from repro.launch.steps import batch_specs, make_train_step
 from repro.models import zoo
 from repro.models.lm import make_context
@@ -86,6 +87,41 @@ def placement_at_step(history, step: int):
     return active[-1] if active else history[0][1]
 
 
+# --- traffic-EMA sidecar (warm relayout resume) -----------------------------
+# The placement table is persisted (placement_history.npz) but the EMA that
+# *produced* it used to restart cold on every resume, leaving the first
+# post-restart relayout to re-solve from a near-empty signal.  The EMA is
+# pure replicated state, so a small sidecar written at the checkpoint cadence
+# resumes it warm; like any EMA it tolerates the (<= ckpt_every steps of)
+# staleness between the sidecar and the committed step it rewinds to.
+
+def _traffic_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, "traffic_ema.npz")
+
+
+def save_traffic_state(ckpt_dir: str, traffic, step: int) -> None:
+    """Persist the EMA accumulators next to the checkpoints (synchronous —
+    the arrays are (L, E)/(L, EP) floats, noise next to a weight save)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    np.savez(_traffic_path(ckpt_dir), step=np.int64(step),
+             **{k: np.asarray(v) for k, v in traffic._asdict().items()})
+
+
+def load_traffic_state(ckpt_dir: str, like):
+    """-> (TrafficState, saved_step) matching ``like``'s shapes, or None when
+    there is no sidecar or it was written for a different model shape."""
+    path = _traffic_path(ckpt_dir)
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    leaves = {}
+    for k, want in like._asdict().items():
+        if k not in z or z[k].shape != tuple(want.shape):
+            return None
+        leaves[k] = jnp.asarray(z[k].astype(np.asarray(want).dtype))
+    return type(like)(**leaves), int(z["step"])
+
+
 def apply_relayout(params, opt, traffic_state, ctx, *, slots_per_lane=None,
                    log=print):
     """Between-steps placement swap: solve a table placement from the EMA
@@ -140,6 +176,17 @@ def main(argv=None):
                          "block (fused_pipe overlaps combine of layer i with "
                          "dispatch of layer i+1 inside a block); 0 = "
                          "per-layer islands")
+    ap.add_argument("--moe-interleave", type=int, default=1,
+                    help="moe_ffn family: token micro-batches interleaved "
+                         "through each stream block (K lanes round-robin "
+                         "through one schedule — lane j+1's router/FFN fills "
+                         "lane j's boundary window); must divide the "
+                         "per-shard batch; 1 = plain chained stream")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation micro-batches; when it "
+                         "equals --moe-interleave on a moe_ffn arch the "
+                         "micro-batches feed the interleaved stream as its "
+                         "lanes instead of a serial scan")
     ap.add_argument("--pipe-slices", type=int, default=0,
                     help="fused_pipe slice count; 0 = auto via pipesim")
     ap.add_argument("--relayout-every", type=int, default=0,
@@ -159,11 +206,12 @@ def main(argv=None):
                        capacity_factor=args.capacity_factor,
                        node_size=max(1, mesh.shape["model"] // 2),
                        moe_stream=args.moe_stream,
+                       moe_interleave=args.moe_interleave,
                        pipe_slices=args.pipe_slices,
                        traffic_decay=args.traffic_decay)
     # resuming a run that relayouted: the checkpoint's weights are laid out
     # per the placement-history sidecar, not the arithmetic map
-    if cfg.moe is not None and cfg.family == "moe":
+    if cfg.moe is not None and cfg.family in ("moe", "moe_ffn"):
         history = load_placement_history(args.ckpt_dir, cfg.moe.n_experts)
         committed = checkpointer.latest_step(args.ckpt_dir)
         if history is not None and committed is not None:
@@ -185,16 +233,38 @@ def main(argv=None):
         opt = adamw.init(params)
         opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
                                     total_steps=args.steps)
-        step_fn = jax.jit(make_train_step(bundle, opt_cfg),
+        step_fn = jax.jit(make_train_step(bundle, opt_cfg, accum=args.accum),
                           donate_argnums=(0, 1))
 
         # online traffic stats: per-layer EMA state threaded through the MoE
-        # islands (moe family); feeds the hier balancer every step and the
-        # load-adaptive re-layout at the --relayout-every cadence.
+        # islands (moe family per-layer, moe_ffn per stream block); feeds the
+        # hier balancer every step and the load-adaptive re-layout at the
+        # --relayout-every cadence.
         traffic = None
-        if cfg.moe is not None and cfg.family == "moe":
-            traffic = traffic_lib.init_traffic_state(
-                cfg.moe.n_experts, ctx.placement.ep, n_layers=cfg.n_layers)
+        serial_accum = (args.accum > 1
+                        and not steps_mod.accum_fuses_into_stream(bundle,
+                                                                  args.accum))
+        if cfg.moe is not None and cfg.family in ("moe", "moe_ffn"):
+            if serial_accum:
+                # the serial microbatch scan does not thread traffic state
+                # yet; the fused path (--moe-interleave == --accum on a
+                # moe_ffn/fused_pipe arch) does
+                print("[traffic] stats disabled under serial gradient "
+                      "accumulation", flush=True)
+            else:
+                traffic = traffic_lib.init_traffic_state(
+                    cfg.moe.n_experts, ctx.placement.ep,
+                    n_layers=cfg.n_layers)
+                # warm EMA resume: only when there is a committed checkpoint
+                # to resume (a stale sidecar from a dead run must not seed a
+                # fresh one); the sidecar rides the checkpoint cadence, so
+                # the first post-resume relayout sees a real load signal
+                if checkpointer.latest_step(args.ckpt_dir) is not None:
+                    warm = load_traffic_state(args.ckpt_dir, traffic)
+                    if warm is not None:
+                        traffic, tstep = warm
+                        print(f"[traffic] resumed EMA state saved at step "
+                              f"{tstep}", flush=True)
         box = {"ctx": ctx, "bundle": bundle, "step_fn": step_fn,
                "traffic": traffic, "n": 0, "fence": False,
                "history": [(0, ctx.placement)]}
@@ -202,8 +272,9 @@ def main(argv=None):
         def rebuild(new_ctx):
             box["ctx"] = new_ctx
             box["bundle"] = zoo.build(cfg, new_ctx)
-            box["step_fn"] = jax.jit(make_train_step(box["bundle"], opt_cfg),
-                                     donate_argnums=(0, 1))
+            box["step_fn"] = jax.jit(
+                make_train_step(box["bundle"], opt_cfg, accum=args.accum),
+                donate_argnums=(0, 1))
             # the next call pays XLA recompilation — fence it off from the
             # runtime's straggler monitor (compile time is not lane health)
             box["fence"] = True
@@ -212,13 +283,16 @@ def main(argv=None):
             """Re-base the adaptive-placement state after a rewind: the
             restored checkpoint's weights carry the layout that was active at
             ``step``, and the relayout cadence counter must rewind with the
-            replayed stream.  EMA stats restart cold (they re-warm within
-            their horizon; DESIGN.md §traffic)."""
+            replayed stream.  EMA stats resume from the sidecar when one was
+            written (warm), else restart cold and re-warm within their
+            horizon (DESIGN.md §traffic)."""
             box["n"] = step
             if box["traffic"] is not None:
-                box["traffic"] = traffic_lib.init_traffic_state(
+                cold = traffic_lib.init_traffic_state(
                     cfg.moe.n_experts, box["ctx"].placement.ep,
                     n_layers=cfg.n_layers)
+                warm = load_traffic_state(args.ckpt_dir, cold)
+                box["traffic"] = warm[0] if warm is not None else cold
             if restored:
                 # drop relayouts newer than the committed step, match layout
                 box["history"] = [(s, p) for s, p in box["history"]
@@ -284,6 +358,16 @@ def main(argv=None):
                 box["history"].append((box["n"], new_ctx.placement))
                 save_placement_history(args.ckpt_dir, box["history"],
                                        new_ctx.placement.node_size)
+            # EMA sidecar rides the checkpoint cadence: any committed
+            # checkpoint finds an EMA no staler than one cadence.  Written
+            # AFTER the relayout block so that when the two cadences
+            # coincide the sidecar holds the post-reset lane-send EMA — a
+            # resume must not feed Algorithm 1 loads measured under the
+            # table the relayout just replaced.
+            if (box["traffic"] is not None
+                    and (box["n"] % args.ckpt_every == 0
+                         or box["n"] == args.steps)):
+                save_traffic_state(args.ckpt_dir, box["traffic"], box["n"])
             return params, opt, metrics
 
         rcfg = RunConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,

@@ -96,7 +96,10 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
 def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
                       mesh, placement: ExpertPlacement, dcfg: DcommConfig,
                       top_k: int, data_axes=("data",), norm_topk: bool = True,
-                      stream: bool = True, fsdp: bool = False) -> jax.Array:
+                      stream: bool = True, fsdp: bool = False,
+                      interleave: int = 1,
+                      traffic: traffic_lib.TrafficState | None = None,
+                      traffic_decay: float = 0.99):
     """A block of N consecutive MoE layers fused into ONE shard_map island.
 
     x: (B, S, d) global.  ``moe_params`` holds the block's stacked weights:
@@ -110,6 +113,21 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
     removes.  With ``stream=False`` (or a non-pipelined engine) the same
     island runs the per-layer-barrier fallback, which is still one island
     per block instead of one per layer.
+
+    ``interleave=K`` splits the island's per-shard batch axis into K
+    micro-batch lanes round-robined through one schedule
+    (``fusco.interleaved_layer_stream``): lane j+1's router + expert FFN is
+    the tail-independent compute that fills lane j's boundary window, which
+    the plain K=1 stream leaves empty.  Requires the per-shard batch to be
+    divisible by K (lanes are batch chunks, so the token split never cuts a
+    sequence).
+
+    ``traffic``: optional BLOCK-stacked ``traffic.TrafficState`` (leading
+    ``(N,)`` dim, one slice per layer of this block) threaded through the
+    island like in :func:`moe_block` — each layer's routing (all interleave
+    lanes) is folded into its slice inside the stream's layer scan, psum'd
+    over the island's axes.  Returns ``(y, new_traffic)`` when given.  This
+    is what extends the load-adaptive re-layout to the stream family.
     """
     ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
     ep_axes = tuple(ep_axes)
@@ -123,30 +141,50 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
         w_spec = w2_spec = P(None, ep_axes, None, None, None)
     r_spec = P(None, None, None)
     ln_spec = P(None, None)
+    axis_names = tuple(data_axes) + ep_axes
 
-    def inner(xl, wr, w1, w3, w2, lnl):
+    def inner(xl, wr, w1, w3, w2, lnl, tr):
         if fsdp:
             w1 = jax.lax.all_gather(w1, "data", axis=4, tiled=True)
             w3 = jax.lax.all_gather(w3, "data", axis=4, tiled=True)
             w2 = jax.lax.all_gather(w2, "data", axis=3, tiled=True)
         b, s, d = xl.shape
+        if interleave > 1 and b % interleave != 0:
+            raise ValueError(
+                f"moe stream interleave={interleave} must divide the "
+                f"island's per-shard batch {b} (micro-batch lanes are batch "
+                "chunks)")
         n = wr.shape[0]
         f = w1.shape[-1]
+        observe = None
+        if tr is not None:
+            my_lane = _lane_index(dcfg, placement)
+            observe = lambda st, A: traffic_lib.observe(
+                st, A, placement, my_lane, decay=traffic_decay,
+                axis_names=axis_names)
+        # b-major flattening: rows [j*(b/K)*s, (j+1)*(b/K)*s) are exactly the
+        # j-th batch chunk, so the stream's contiguous token lanes ARE the
+        # micro-batches of the batch-axis split.
         xt = xl.reshape(b * s, d)
         y = fusco.layer_stream(
             xt, wr, w1.reshape(n, -1, d, f), w3.reshape(n, -1, d, f),
             w2.reshape(n, -1, f, d), placement, dcfg, top_k,
             ln=lnl if ln is not None else None, norm_topk=norm_topk,
-            stream=stream)
-        return y.reshape(b, s, d)
+            stream=stream, interleave=interleave, traffic=tr, observe=observe)
+        if tr is not None:
+            y, tr = y
+        return y.reshape(b, s, d), tr
 
+    t_spec = jax.tree.map(lambda l: P(*([None] * l.ndim)), traffic)
     fn = shard_map(inner, mesh=mesh,
-                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, ln_spec),
-                   out_specs=x_spec, check_vma=False)
+                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, ln_spec,
+                             t_spec),
+                   out_specs=(x_spec, t_spec), check_vma=False)
     lnl = ln if ln is not None else jnp.zeros(
         (moe_params["router"].shape[0], x.shape[-1]), x.dtype)
-    return fn(x, moe_params["router"], moe_params["w1"], moe_params["w3"],
-              moe_params["w2"], lnl)
+    y, new_traffic = fn(x, moe_params["router"], moe_params["w1"],
+                        moe_params["w3"], moe_params["w2"], lnl, traffic)
+    return y if traffic is None else (y, new_traffic)
 
 
 def lane_major_expert_weights(w_all: jax.Array, placement: ExpertPlacement) -> jax.Array:

@@ -23,7 +23,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.dcomm import DcommConfig
-from repro.core.routing import ExpertPlacement, router_logits, top_k_routing
+from repro.core.routing import (ExpertPlacement, balanced_replica_choice,
+                                router_logits, top_k_routing)
 from repro.layers import attention as attn_lib
 from repro.layers.attention import KVCache, attention_block, cache_update, decode_attention
 from repro.layers.common import dense_init, embed_init, rms_norm, apply_rope, apply_mrope
@@ -52,6 +53,10 @@ class ModelContext:
     # overlaps the combine of layer i with the dispatch of layer i+1 inside
     # a block); <=1 keeps per-layer islands.
     moe_stream: int = 0
+    # moe_ffn family: token micro-batches interleaved through each stream
+    # block (K lanes round-robin through one schedule; lane j+1's compute
+    # fills lane j's boundary window).  <=1 = the plain chained stream.
+    moe_interleave: int = 1
     # EMA decay of the online traffic statistics (when a TrafficState is
     # threaded through the forward)
     traffic_decay: float = 0.99
@@ -108,7 +113,7 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
                  engine: str = "fused_flat", capacity_factor: float = 2.0,
                  use_balancer: bool = True, node_size: int | None = None,
                  remat: bool = True, moe_stream: int = 0,
-                 pipe_slices: int = 0,
+                 moe_interleave: int = 1, pipe_slices: int = 0,
                  traffic_decay: float = 0.99) -> ModelContext:
     placement = dcfg = None
     if cfg.moe is not None:
@@ -128,7 +133,9 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
         fsdp = per_lane_gb > 4.0       # ZeRO-3 the expert weights when large
     return ModelContext(cfg=cfg, mesh=mesh, multi_pod=multi_pod, dcfg=dcfg,
                         placement=placement, remat=remat, fsdp_experts=fsdp,
-                        moe_stream=moe_stream, traffic_decay=traffic_decay)
+                        moe_stream=moe_stream,
+                        moe_interleave=max(1, moe_interleave),
+                        traffic_decay=traffic_decay)
 
 
 # ---------------------------------------------------------------------------
@@ -273,13 +280,15 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
     ``(L,)`` dim, like stacked layer params) threaded through the MoE islands
     — each layer's slice rides the layer scan as xs and comes back updated as
     ys, exactly like RNG state would.  Returns ``(h, new_traffic)`` when
-    given.  Supported for the ``moe`` family (per-layer islands)."""
+    given.  Supported for the ``moe`` family (per-layer islands) and the
+    ``moe_ffn`` family (slices regrouped per stream block, observed inside
+    the block island's layer-stream scan)."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
-    if traffic is not None and cfg.family != "moe":
+    if traffic is not None and cfg.family not in ("moe", "moe_ffn"):
         raise ValueError(
-            f"traffic stats are threaded per-layer through moe_block islands; "
-            f"family {cfg.family!r} is not supported (moe only)")
+            f"traffic stats are threaded per-layer through the MoE islands; "
+            f"family {cfg.family!r} is not supported (moe / moe_ffn only)")
     if inputs.ndim == 2:
         h = params["embed"].astype(cd)[inputs]
     else:
@@ -299,11 +308,13 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
             raise ValueError(
                 f"moe_stream={ctx.moe_stream} must divide n_layers={L} "
                 "(every stream block needs the same static slice geometry)")
-        blocks = jax.tree.map(
-            lambda a: a.reshape((L // blk, blk) + a.shape[1:]),
-            params["layers"])
+        reblock = lambda a: a.reshape((L // blk, blk) + a.shape[1:])
+        blocks = jax.tree.map(reblock, params["layers"])
 
         def block_fn(h, bp):
+            tr = None
+            if traffic is not None:
+                bp, tr = bp
             bp = jax.tree.map(lambda x: x.astype(cd)
                               if x.dtype in (jnp.float32, jnp.bfloat16) else x,
                               bp)
@@ -311,12 +322,22 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
                 h, bp["moe"], bp["ln1"], mesh=ctx.mesh,
                 placement=ctx.placement, dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
                 data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk,
-                fsdp=ctx.fsdp_experts)
-            return ctx.constrain(h), None
+                fsdp=ctx.fsdp_experts, interleave=ctx.moe_interleave,
+                traffic=tr, traffic_decay=ctx.traffic_decay)
+            if tr is not None:
+                h, tr = h
+            return ctx.constrain(h), tr
 
         body = jax.checkpoint(block_fn) if ctx.remat else block_fn
-        h, _ = jax.lax.scan(body, h, blocks)
-        return rms_norm(h, params["final_norm"].astype(cd))
+        xs = blocks if traffic is None else (
+            blocks, jax.tree.map(reblock, traffic))
+        h, new_traffic = jax.lax.scan(body, h, xs)
+        h = rms_norm(h, params["final_norm"].astype(cd))
+        if traffic is None:
+            return h
+        # un-block the per-layer traffic slices back to a flat (L,) stack
+        return h, jax.tree.map(
+            lambda a: a.reshape((L,) + a.shape[2:]), new_traffic)
 
     def layer_fn(h, lp, is_global=False):
         tr = None
@@ -471,7 +492,18 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, dtype,
 
 def _moe_decode_block(x, moe_p, ctx: ModelContext):
     """Replicated-token EP for single-step decode: every lane routes all
-    tokens, computes only its experts' shares, psum over EP axes."""
+    tokens, computes only its experts' shares, psum over EP axes.
+
+    Replica choice: decode used to pin replica 0, so a replicated hot
+    expert's whole decode load landed on one lane.  It now reuses
+    ``balanced_replica_choice`` — the same deterministic round-robin on the
+    running per-expert count that prefill/training shuffle under (and the
+    sender-local analogue of picking the least-EMA-loaded replica, the
+    signal the serving engine's ``TrafficState`` tracks) — so decode traffic
+    spreads across all lanes hosting a replica.  The choice is replicated
+    across lanes (same A everywhere), so exactly one lane still computes
+    each (token, k) share and the psum is unchanged.
+    """
     cfg = ctx.cfg
     placement, dcfg = ctx.placement, ctx.dcfg
     ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
@@ -491,8 +523,9 @@ def _moe_decode_block(x, moe_p, ctx: ModelContext):
         xt = xl.reshape(b * s, d)
         logits = router_logits(xt, wr)
         A, gates = top_k_routing(logits, cfg.moe.top_k, cfg.moe.norm_topk)
-        lane = placement.lane_of_expert(A)               # replica 0 at decode
-        eloc = placement.local_expert_index(A)
+        replica = balanced_replica_choice(A, placement)
+        lane = placement.lane_of_expert(A, replica)
+        eloc = placement.local_expert_index(A, replica)
         my = jax.lax.axis_index(ep_axes[-1])
         if len(ep_axes) == 2:
             my = my + jax.lax.axis_index(ep_axes[0]) * (
@@ -623,16 +656,21 @@ def prefill(params, inputs, positions, ctx: ModelContext, max_len: int,
     what lets the serving engine report per-wave expert-load stats."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
-    if traffic is not None and cfg.family != "moe":
+    if traffic is not None and cfg.family not in ("moe", "moe_ffn"):
         raise ValueError(
-            f"traffic stats in prefill are supported for the moe family "
-            f"only, got {cfg.family!r}")
+            f"traffic stats in prefill are supported for the moe/moe_ffn "
+            f"families only, got {cfg.family!r}")
     if cfg.family == "moe_ffn":
         # stateless stack: prefill is just the forward (stream blocks incl.)
-        h = forward_hidden(params, inputs, positions, ctx)
+        h = forward_hidden(params, inputs, positions, ctx, traffic=traffic)
+        new_traffic = None
+        if traffic is not None:
+            h, new_traffic = h
         logits = (h[:, -1] @ params["lm_head"].astype(cd)).astype(jnp.float32)
-        return logits, DecodeState(None, None,
-                                   jnp.array(h.shape[1], jnp.int32))
+        state = DecodeState(None, None, jnp.array(h.shape[1], jnp.int32))
+        if traffic is not None:
+            return logits, state, new_traffic
+        return logits, state
     if inputs.ndim == 2:
         h = params["embed"].astype(cd)[inputs]
     else:

@@ -11,9 +11,24 @@ the serve_step dry-run cells model.
 Metrics: TTFT per request, decode tok/s, queue latency — plus, for MoE
 models with ``track_traffic=True``, per-wave expert-load statistics from the
 online traffic subsystem (``core/traffic.py``): the prefill threads an EMA
-``TrafficState`` through the MoE islands, and each wave's raw routing counts
-are reported as max/mean lane load and hot-expert share (the signal a serving
-autoscaler or re-layout policy would act on).
+``TrafficState`` through the MoE islands (``moe`` per-layer, ``moe_ffn`` per
+stream block), and each wave's raw routing counts are reported as max/mean
+lane load and hot-expert share (the signal a serving autoscaler or re-layout
+policy would act on).
+
+Interleave lanes: when the bundle is a ``moe_ffn`` stack with
+``ModelContext.moe_interleave == K``, the prefill wave's request rows ARE the
+micro-batch lanes of the interleaved layer stream — request j+1's router +
+expert FFN fills request j's boundary window.  The engine pads each wave's
+batch up to a multiple of K × data-shards (pad rows carry pad tokens and are
+dropped from the results), so ragged waves still satisfy the stream's static
+lane split.
+
+Stats caveat: the traffic counters fold every routed position, including
+left-pad slots and interleave pad rows — a bounded distortion (< one lane
+multiple of all-pad rows per wave, plus each request's pad prefix) that is
+fine for the imbalance signal but should be masked out (ROADMAP) before
+serving-side EMA drives placement policy.
 """
 
 from __future__ import annotations
@@ -54,11 +69,23 @@ class ServingEngine:
         self.finished: list[Request] = []
         self.wave_loads: list[dict] = []
         self._next_id = 0
+        # moe_ffn interleaved stream: wave batches must split into K lanes
+        # PER DATA SHARD — the island sees batch / data_shards rows, so the
+        # wave pads to a multiple of interleave × data-shard count
+        self.interleave = (getattr(bundle.ctx, "moe_interleave", 1)
+                           if bundle.ctx.cfg.family == "moe_ffn" else 1)
+        self._wave_mult = 1
+        if self.interleave > 1:
+            dsz = 1
+            for ax in bundle.ctx.data_axes:
+                dsz *= dict(bundle.ctx.mesh.shape)[ax]
+            self._wave_mult = self.interleave * dsz
         self.traffic = None
         if track_traffic:
             ctx = bundle.ctx
-            if ctx.cfg.moe is None or ctx.cfg.family != "moe":
-                raise ValueError("track_traffic requires a moe-family bundle")
+            if ctx.cfg.moe is None or ctx.cfg.family not in ("moe", "moe_ffn"):
+                raise ValueError(
+                    "track_traffic requires a moe/moe_ffn-family bundle")
             self.traffic = traffic_lib.init_traffic_state(
                 ctx.cfg.moe.n_experts, ctx.placement.ep,
                 n_layers=ctx.cfg.n_layers)
@@ -89,7 +116,10 @@ class ServingEngine:
             return []
         s = max(len(r.prompt) for r in wave)
         b = len(wave)
-        toks = np.full((b, s), self.pad_id, np.int32)
+        # pad the batch up to a multiple of (interleave lanes × data shards);
+        # pad rows are full pad-token rows, sliced off every result below
+        bp = -(-b // self._wave_mult) * self._wave_mult
+        toks = np.full((bp, s), self.pad_id, np.int32)
         for i, r in enumerate(wave):
             toks[i, s - len(r.prompt):] = r.prompt      # left-pad
         batch = {"tokens": jnp.asarray(toks)}

@@ -55,15 +55,20 @@ def conformance_spec(engine: str, *, mesh=(("model", 8),), node_sizes=(2, 4),
     }
 
 
-def stream_spec(*, n_layers: int = 2, stream: bool = True, **kw) -> dict:
+def stream_spec(*, n_layers: int = 2, stream: bool = True,
+                interleave: int = 1, **kw) -> dict:
     """A conformance spec for the cross-layer layer-stream path: same grid
     axes, checked against the stacked ``fusco.stream_dense_reference`` oracle
     (``n_layers`` chained residual MoE layers).  ``stream=False`` runs the
     per-layer-barrier fallback of ``fusco.layer_stream`` instead — both must
-    match the same oracle."""
+    match the same oracle.  ``interleave=K`` round-robins K token micro-batch
+    lanes through the schedule (``fusco.interleaved_layer_stream``); the
+    oracle is unchanged (the stream is per-token order-preserving), so the
+    SAME dense reference pins every K."""
     spec = conformance_spec(kw.pop("engine", "fused_pipe"), **kw)
     spec["n_layers"] = n_layers
     spec["stream"] = bool(stream)
+    spec["interleave"] = int(interleave)
     return spec
 
 
@@ -208,6 +213,7 @@ def run_stream_conformance(spec) -> None:
     e, k = spec["n_experts"], spec["top_k"]
     d, f = spec["d"], spec["f"]
     n_layers, stream = spec["n_layers"], spec["stream"]
+    interleave = spec.get("interleave", 1)
     ref = fusco.stream_dense_reference(x, wr, w1, w3, w2, k)
     w_spec = P(None, *ep_spec)                       # (N, EP_lanes*El, ., .)
 
@@ -218,7 +224,7 @@ def run_stream_conformance(spec) -> None:
             return fusco.layer_stream(
                 x, wr, a.reshape(n_layers, el, d, f),
                 b.reshape(n_layers, el, d, f), c.reshape(n_layers, el, f, d),
-                placement, cfg, k, stream=stream)
+                placement, cfg, k, stream=stream, interleave=interleave)
         g = shard_map(fn, mesh=mesh,
                       in_specs=(ep_spec, P(), w_spec, w_spec, w_spec),
                       out_specs=ep_spec, check_vma=False)

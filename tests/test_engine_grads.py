@@ -117,29 +117,34 @@ w2l = jnp.stack([lane_major_expert_weights(w2[l], placement).reshape(-1, F, D)
                  for l in range(N)])
 
 for pipe_slices in (1, 4):
-    cfg = DcommConfig(engine="fused_pipe", ep_axis="model", node_size=2,
-                      capacity_factor=8.0, pipe_slices=pipe_slices)
+    for interleave in (1, 2):
+        cfg = DcommConfig(engine="fused_pipe", ep_axis="model", node_size=2,
+                          capacity_factor=8.0, pipe_slices=pipe_slices)
 
-    def fn(xv, wrv, av, bv, cv):
-        return fusco.pipe_layer_stream(
-            xv, wrv, av.reshape(N, el, D, F), bv.reshape(N, el, D, F),
-            cv.reshape(N, el, F, D), placement, cfg, K)
+        def fn(xv, wrv, av, bv, cv):
+            # interleave=1 routes through pipe_layer_stream, >=2 through the
+            # micro-batch interleaved schedule (K tails in flight) — the
+            # backward must scatter every deferred tail's cotangent home
+            return fusco.layer_stream(
+                xv, wrv, av.reshape(N, el, D, F), bv.reshape(N, el, D, F),
+                cv.reshape(N, el, F, D), placement, cfg, K,
+                interleave=interleave)
 
-    g = shard_map(fn, mesh=mesh,
-                  in_specs=(P("model"), P(), P(None, "model"),
-                            P(None, "model"), P(None, "model")),
-                  out_specs=P("model"), check_vma=False)
-    grads = jax.jit(jax.grad(
-        lambda xv, wrv, av, bv, cv: jnp.sum(g(xv, wrv, av, bv, cv) * cot),
-        argnums=(0, 1, 2, 3, 4)))(x, wr, w1l, w3l, w2l)
-    names = ("x", "wr", "w1", "w3", "w2")
-    shapes = (None, None, (N, E, D, F), (N, E, D, F), (N, E, F, D))
-    for name, got, want, shp in zip(names, grads, ref_grads, shapes):
-        if shp is not None:
-            got = got.reshape(shp)
-        err = float(jnp.max(jnp.abs(got - want)))
-        assert err < 2e-3, ("stream", pipe_slices, name, err)
-    print("STREAM_GRAD_OK", pipe_slices)
+        g = shard_map(fn, mesh=mesh,
+                      in_specs=(P("model"), P(), P(None, "model"),
+                                P(None, "model"), P(None, "model")),
+                      out_specs=P("model"), check_vma=False)
+        grads = jax.jit(jax.grad(
+            lambda xv, wrv, av, bv, cv: jnp.sum(g(xv, wrv, av, bv, cv) * cot),
+            argnums=(0, 1, 2, 3, 4)))(x, wr, w1l, w3l, w2l)
+        names = ("x", "wr", "w1", "w3", "w2")
+        shapes = (None, None, (N, E, D, F), (N, E, D, F), (N, E, F, D))
+        for name, got, want, shp in zip(names, grads, ref_grads, shapes):
+            if shp is not None:
+                got = got.reshape(shp)
+            err = float(jnp.max(jnp.abs(got - want)))
+            assert err < 2e-3, ("stream", pipe_slices, interleave, name, err)
+        print("STREAM_GRAD_OK", pipe_slices, interleave)
 print("ALL_GRADS_OK")
 """
 

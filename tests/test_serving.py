@@ -59,3 +59,36 @@ def test_serving_reports_per_wave_expert_load_stats():
         assert 0 < w["top_expert_share"] <= 1.0
     st = eng.stats()
     assert st["waves"] == 2 and st["mean_lane_imbalance"] >= 1.0
+
+
+def test_serving_prefill_waves_as_interleave_lanes():
+    """moe_ffn bundles with an interleaved stream: the wave's request rows
+    are the stream's micro-batch lanes.  A ragged wave (3 requests, K=2
+    lanes) must be padded up to the lane multiple, produce results only for
+    the real requests, and report traffic for the wave."""
+    import dataclasses
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dataclasses.replace(get_arch("moe-ffn-stream").reduced(), n_layers=2)
+    ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_pipe",
+                       capacity_factor=4.0, node_size=1, moe_stream=2,
+                       moe_interleave=2)
+    bundle = zoo.build(cfg, ctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(bundle, max_batch=3, max_len=48, track_traffic=True)
+    assert eng.interleave == 2
+    r = np.random.default_rng(0)
+    for i in range(5):
+        eng.submit(r.integers(0, cfg.vocab, (8 + i,)), max_new=3)
+    with mesh:
+        done1 = eng.run_wave(params)     # 3 requests -> padded to 4 lanes
+        done2 = eng.run_wave(params)     # 2 requests -> exactly 2 lanes
+    assert len(done1) == 3 and len(done2) == 2
+    for req in eng.finished:
+        assert req.done and req.ttft_s is not None
+        assert 1 <= len(req.output) <= req.max_new
+        assert all(0 <= t < cfg.vocab for t in req.output)
+    # traffic observed once per wave, per stream-layer slice
+    assert eng.traffic.steps.tolist() == [2] * cfg.n_layers
+    assert len(eng.wave_loads) == 2
+    for w in eng.wave_loads:
+        assert w["expert_tokens"].sum() > 0 and w["lane_imbalance"] >= 1.0

@@ -172,6 +172,100 @@ def test_moe_block_threads_traffic_and_relayout_migrates():
         assert abs(float(m2["loss"]) - float(m1["loss"])) < 1.0
 
 
+def test_stream_family_threads_traffic_and_relayout_migrates():
+    """moe_ffn (cross-layer stream family): traffic rides the block scan /
+    the layer-stream scan carry, observes every (token, k) assignment per
+    layer, and apply_relayout migrates the stream stack's expert weights —
+    the ROADMAP 'relayout for the moe_ffn stream family' follow-up."""
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.launch.steps import make_train_step
+    from repro.launch.train import apply_relayout
+    from repro.models import zoo
+    from repro.models.lm import make_context
+    from repro.optim import adamw
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dataclasses.replace(get_arch("moe-ffn-stream").reduced(), n_layers=4)
+    ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_pipe",
+                       capacity_factor=4.0, node_size=1, moe_stream=2,
+                       moe_interleave=2)
+    bundle = zoo.build(cfg, ctx)
+    with mesh:
+        params = bundle.init(jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=4)
+        step = jax.jit(make_train_step(bundle, opt_cfg))
+        r = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(r.integers(0, cfg.vocab, (2, 16))),
+                 "labels": jnp.asarray(r.integers(0, cfg.vocab, (2, 16)))}
+        st = traffic.init_traffic_state(cfg.moe.n_experts, ctx.placement.ep,
+                                        n_layers=cfg.n_layers)
+        params, opt, m1 = step(params, opt, batch, st)
+        st = m1.pop("traffic")
+        assert st.steps.tolist() == [1] * cfg.n_layers
+        # all interleave lanes observed: 2*16 tokens x top_k per layer
+        assert np.asarray(st.last_expert_count).sum(axis=-1).tolist() \
+            == [2 * 16 * cfg.moe.top_k] * cfg.n_layers
+        params, opt, ctx2, stats = apply_relayout(params, opt, st, ctx,
+                                                  log=lambda *a, **k: None)
+        assert stats["slots"] == ctx.placement.ep * ctx.placement.experts_per_lane
+        bundle2 = zoo.build(cfg, ctx2)
+        step2 = jax.jit(make_train_step(bundle2, opt_cfg))
+        params, opt, m2 = step2(params, opt, batch, st)
+        assert np.isfinite(float(m2["loss"]))
+        assert abs(float(m2["loss"]) - float(m1["loss"])) < 1.0
+
+
+def test_traffic_sidecar_round_trip(tmp_path):
+    """Warm-EMA resume: the sidecar restores the exact accumulator state
+    (bit-equal leaves + observation counters), refuses shape mismatches, and
+    is absent-safe."""
+    from repro.launch.train import load_traffic_state, save_traffic_state
+    E, EP, L = 8, 4, 3
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=2)
+    st = traffic.init_traffic_state(E, EP, n_layers=L)
+    for i in range(3):
+        st = jax.vmap(lambda s: traffic.observe(
+            s, _imbalanced(32, E, 2, seed=i), placement, 0, decay=0.9))(st)
+    save_traffic_state(str(tmp_path), st, step=7)
+    like = traffic.init_traffic_state(E, EP, n_layers=L)
+    loaded, saved_step = load_traffic_state(str(tmp_path), like)
+    assert saved_step == 7
+    for got, want in zip(loaded, st):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert loaded.steps.tolist() == [3] * L
+    # shape mismatch (different model) -> refuse, never mis-restore
+    other = traffic.init_traffic_state(E * 2, EP, n_layers=L)
+    assert load_traffic_state(str(tmp_path), other) is None
+    assert load_traffic_state(str(tmp_path / "missing"), like) is None
+
+
+@pytest.mark.slow
+def test_train_resume_keeps_traffic_ema_warm(tmp_path, multidevice):
+    """EMA continuity across a fresh-process resume: a second train.main run
+    against the same checkpoint dir must CONTINUE the observation counter
+    (4 steps + 2 steps -> 6 observations per layer), not restart it cold."""
+    code = f"""
+import numpy as np
+from repro.launch import train
+args = ["--arch", "moe-ffn-stream", "--reduced", "--engine", "fused_pipe",
+        "--moe-stream", "2", "--moe-interleave", "2", "--accum", "2",
+        "--seq", "32", "--batch", "4", "--ckpt-dir", {str(tmp_path)!r},
+        "--ckpt-every", "2", "--relayout-every", "3", "--log-every", "10"]
+train.main(args + ["--steps", "4"])
+z = np.load({str(tmp_path)!r} + "/traffic_ema.npz")
+assert int(z["step"]) == 4 and (z["steps"] == 4).all(), (z["step"], z["steps"])
+train.main(args + ["--steps", "6"])          # fresh placement/EMA resume
+z = np.load({str(tmp_path)!r} + "/traffic_ema.npz")
+assert int(z["step"]) == 6, int(z["step"])
+assert (z["steps"] == 6).all(), z["steps"]   # 4 warm + 2 new, not cold 2
+assert z["expert_ema"].sum() > 0
+print("TRAFFIC_RESUME_OK")
+"""
+    assert "TRAFFIC_RESUME_OK" in multidevice(code, 2, timeout=900)
+
+
 def test_placement_history_sidecar_round_trip(tmp_path):
     """Relayout × checkpoint consistency: the sidecar must return, for any
     committed step, exactly the table that was active when that checkpoint's
