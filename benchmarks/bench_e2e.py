@@ -37,7 +37,7 @@ def bench_model(cfg):
         params = bundle.init(jax.random.PRNGKey(0))
         opt = adamw.init(params)
         step = jax.jit(make_train_step(bundle, adamw.AdamWConfig()))
-        batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, 64)
+        batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, SEQ)
         with mesh:
             p, o, m = step(params, opt, batch)
             jax.block_until_ready(m["loss"])
@@ -47,7 +47,7 @@ def bench_model(cfg):
             jax.block_until_ready(m["loss"])
             out[f"train_{engine}"] = (time.perf_counter() - t0) / 3
             # TTFT: prefill latency
-            pf = jax.jit(lambda pp, bb: bundle.prefill(pp, bb, 96))
+            pf = jax.jit(lambda pp, bb: bundle.prefill(pp, bb, SEQ + 32))
             logits, st = pf(params, batch)
             jax.block_until_ready(logits)
             t0 = time.perf_counter()
@@ -80,7 +80,7 @@ def bench_stream():
         opt = adamw.init(params)
         step = jax.jit(make_train_step(bundle, adamw.AdamWConfig(),
                                        accum=accum))
-        batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, 64)
+        batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, SEQ)
         with mesh:
             p, o, m = step(params, opt, batch)
             jax.block_until_ready(m["loss"])
@@ -91,14 +91,63 @@ def bench_stream():
             out[f"train_{label}"] = (time.perf_counter() - t0) / 3
     return out
 
+def bench_tx():
+    # the ATTENTION-separated stream A/B/C (moe_tx: parallel attention+MoE
+    # blocks, the island owning the attention collectives): per-layer
+    # barriers vs 2-layer attention-stream blocks (each layer's MoE tail
+    # combine riding across its attention block) vs the 2-way interleaved
+    # variant.  Same function, so CPU measures each schedule's structural
+    # cost; on async hardware the attention-filled windows are the win.
+    import dataclasses
+    cfg = dataclasses.replace(get_arch("moe-tx-stream").reduced(), n_layers=4)
+    out = {}
+    for label, stream, interleave, accum in [
+            ("perlayer", 0, 1, 1), ("attnfilled", 2, 1, 1),
+            ("interleaved", 2, 2, 1), ("interleaved_accum", 2, 2, 2)]:
+        ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_pipe",
+                           capacity_factor=2.0, node_size=2,
+                           moe_stream=stream, moe_interleave=interleave)
+        bundle = zoo.build(cfg, ctx)
+        params = bundle.init(jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        step = jax.jit(make_train_step(bundle, adamw.AdamWConfig(),
+                                       accum=accum))
+        batch = zoo.make_smoke_batch(cfg, jax.random.PRNGKey(1), 8, SEQ)
+        with mesh:
+            p, o, m = step(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            for _ in range(3):
+                p, o, m = step(p, o, batch)
+            jax.block_until_ready(m["loss"])
+            out[f"train_{label}"] = (time.perf_counter() - t0) / 3
+            if accum > 1:
+                continue   # accum only changes the train step; its TTFT is
+                           # the interleaved row's, so skip the re-measure
+            # TTFT through the stream prefill (KV caches extracted from the
+            # islands)
+            pf = jax.jit(lambda pp, bb: bundle.prefill(pp, bb, SEQ + 32))
+            logits, st = pf(params, batch)
+            jax.block_until_ready(logits)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                logits, st = pf(params, batch)
+            jax.block_until_ready(logits)
+            out[f"ttft_{label}"] = (time.perf_counter() - t0) / 3
+    return out
+
 print(json.dumps({"qwen3_moe_like": bench_model(qwen_like),
                   "deepseek_like": bench_model(deepseek_like),
-                  "moe_ffn_stream": bench_stream()}))
+                  "moe_ffn_stream": bench_stream(),
+                  "moe_tx_stream": bench_tx()}))
 """
 
 
-def run() -> list[tuple[str, float, str]]:
-    res = run_sub(CODE, n_devices=8, timeout=2400)
+def run(t: int | None = None) -> list[tuple[str, float, str]]:
+    """``t``: batch sequence length for every bench cell (the --sizes smoke
+    knob CI uses); None = the default 64."""
+    res = run_sub(f"SEQ = {int(t) if t else 64}\n" + CODE, n_devices=8,
+                  timeout=2400)
     rows = []
     for model, r in res.items():
         for k, v in r.items():
@@ -115,4 +164,14 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("e2e/moe_ffn_stream/train_accum_fused_vs_unit_batch",
                  stream["train_interleaved"]
                  / stream["train_interleaved_accum"], "x"))
+    tx = res["moe_tx_stream"]
+    for kind in ("train", "ttft"):
+        rows.append((f"e2e/moe_tx_stream/{kind}_schedule_overhead",
+                     tx[f"{kind}_perlayer"] / tx[f"{kind}_attnfilled"], "x"))
+        rows.append((f"e2e/moe_tx_stream/{kind}_interleave_overhead",
+                     tx[f"{kind}_attnfilled"] / tx[f"{kind}_interleaved"],
+                     "x"))
+    rows.append(("e2e/moe_tx_stream/train_accum_fused_vs_unit_batch",
+                 tx["train_interleaved"] / tx["train_interleaved_accum"],
+                 "x"))
     return rows

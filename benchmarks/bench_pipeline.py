@@ -34,7 +34,8 @@ from __future__ import annotations
 from benchmarks.common import PREAMBLE, run_sub
 from repro.core.pipesim import (PipeParams, best_slice, simulate,
                                 simulate_interleaved_stream,
-                                simulate_layer_stream, sweep)
+                                simulate_layer_stream, simulate_tx_stream,
+                                sweep)
 
 REAL_CODE = PREAMBLE + """
 T = {t}
@@ -89,6 +90,62 @@ rows["perlayer_barrier_flat"] = timeit(
 print(json.dumps(rows))
 """
 
+TX_CODE = PREAMBLE + """
+# attention-separated stream (moe_tx): N parallel attention+MoE transformer
+# blocks through one fused schedule — the tail combine of each layer's MoE
+# rides across that layer's attention block (fusco.tx_layer_stream), vs the
+# SAME island with per-layer barriers.  Matched slice counts isolate the
+# schedule structure (CPU has no async collectives).
+N, T = 4, {t}
+EL = E // EP
+NH, NKV, HD = 8, 4, 32
+B = 2
+S = EP * T // B
+ks = jax.random.split(jax.random.PRNGKey(0), 11)
+xb = jax.random.normal(ks[0], (B, S, D), jnp.float32)
+positions = jnp.arange(S)
+lane_params = {{
+    "ln1": jnp.ones((N, D)), "ln2": jnp.ones((N, D)),
+    "wq": jax.random.normal(ks[1], (N, D, NH * HD)) * 0.1,
+    "wk": jax.random.normal(ks[2], (N, D, NKV * HD)) * 0.1,
+    "wv": jax.random.normal(ks[3], (N, D, NKV * HD)) * 0.1,
+    "wo": jax.random.normal(ks[4], (N, NH * HD, D)) * 0.1,
+    "router": jax.random.normal(ks[5], (N, D, E)) * 0.5,
+    "w1": jax.random.normal(ks[6], (N, EP * EL, D, F)) * 0.1,
+    "w3": jax.random.normal(ks[7], (N, EP * EL, D, F)) * 0.1,
+    "w2": jax.random.normal(ks[8], (N, EP * EL, F, D)) * 0.1,
+}}
+lp_spec = {{k2: (P(None, "model", None, None) if k2 in ("w1", "w3", "w2")
+                else P(*([None] * v.ndim)))
+           for k2, v in lane_params.items()}}
+
+def tx_fn(stream, engine="fused_pipe", interleave=1, **ekw):
+    cfg = DcommConfig(engine=engine, ep_axis="model", node_size=NODE,
+                      capacity_factor=2.0, **ekw)
+    def fn(x, pos, lp):
+        return fusco.tx_layer_stream(x, pos, lp, placement, cfg, K,
+                                     n_heads=NH, n_kv=NKV, head_dim=HD,
+                                     stream=stream, interleave=interleave)
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(None, "model", None), P(None), lp_spec),
+                     out_specs=P(None, "model", None), check_vma=False)
+
+rows = {{}}
+for s in (2, 4):
+    rows["txfilled_slices_%d" % s] = timeit(
+        jax.jit(tx_fn(True, pipe_slices=s)), xb, positions, lane_params)
+    rows["txinterleaved_slices_%d" % s] = timeit(
+        jax.jit(tx_fn(True, interleave=2, pipe_slices=s)), xb, positions,
+        lane_params)
+    rows["txbarrier_slices_%d" % s] = timeit(
+        jax.jit(tx_fn(False, pipe_slices=s)), xb, positions, lane_params)
+rows["txfilled_auto"] = timeit(jax.jit(tx_fn(True)), xb, positions,
+                               lane_params)
+rows["txbarrier_flat"] = timeit(jax.jit(tx_fn(False, engine="fused_flat")),
+                                xb, positions, lane_params)
+print(json.dumps(rows))
+"""
+
 
 def run(t: int | None = None) -> list[tuple[str, float, str]]:
     rows = []
@@ -121,6 +178,23 @@ def run(t: int | None = None) -> list[tuple[str, float, str]]:
                      chained["bubble_fraction"] * 100, "%"))
         rows.append((f"pipesim/{name}/stream4_interleaved2_speedup_vs_chained",
                      inter["speedup_vs_chained"], "x"))
+        # attention-separated stream (moe_tx): attention equal to one layer's
+        # staging time fills the boundary window a pure MoE chain leaves
+        # empty — the acceptance row: tx-filled boundary bubble must be
+        # strictly below the pure chained one (asserted in
+        # tests/test_ragged_and_pipesim.py at the TPU point)
+        attn_s = p.payload_bytes / stage_bw
+        tx = simulate_tx_stream(p, 8, 4, attn_s)
+        tx2 = simulate_tx_stream(p, 8, 4, attn_s, interleave=2)
+        rows.append((f"pipesim/{name}/stream4_txfilled_boundary_bubble",
+                     tx["boundary_bubble_fraction"] * 100, "%"))
+        rows.append((f"pipesim/{name}/stream4_txfilled_bubble_fraction",
+                     tx["bubble_fraction"] * 100, "%"))
+        rows.append((f"pipesim/{name}/stream4_txfilled_boundary_bubble_reduction_vs_chained",
+                     tx["boundary_bubble_reduction_vs_pure_chained"] * 100,
+                     "%"))
+        rows.append((f"pipesim/{name}/stream4_txfilled_interleaved2_boundary_bubble",
+                     tx2["boundary_bubble_fraction"] * 100, "%"))
 
     r = run_sub(REAL_CODE.format(t=t or 256), timeout=1200)
     for key, v in sorted(r.items()):
@@ -142,4 +216,18 @@ def run(t: int | None = None) -> list[tuple[str, float, str]]:
         rows.append((f"pipeline/stream4/interleave_overhead_slices_{n}",
                      s[f"chained_slices_{n}"]
                      / s[f"interleaved_slices_{n}"], "x"))
+
+    tx = run_sub(TX_CODE.format(t=t or 128), timeout=1200)
+    for key, v in sorted(tx.items()):
+        rows.append((f"pipeline/txstream4/{key}", v * 1e6, ""))
+    # attention-filled vs barrier at matched slices: the same attention+MoE
+    # computation through the fused schedule vs per-layer barriers — the
+    # structural-cost row the filled window must beat on async hardware
+    for n in (2, 4):
+        rows.append((f"pipeline/txstream4/schedule_overhead_slices_{n}",
+                     tx[f"txbarrier_slices_{n}"]
+                     / tx[f"txfilled_slices_{n}"], "x"))
+        rows.append((f"pipeline/txstream4/interleave_overhead_slices_{n}",
+                     tx[f"txfilled_slices_{n}"]
+                     / tx[f"txinterleaved_slices_{n}"], "x"))
     return rows

@@ -18,7 +18,8 @@ def main() -> None:
     ap.add_argument("--sizes", default=None,
                     help="comma-separated token counts per lane for the "
                          "suites that take sizes (traffic, ablation, "
-                         "pipeline) — e.g. --sizes 64 for the CI smoke run")
+                         "pipeline, e2e) — e.g. --sizes 64 for the CI smoke "
+                         "run")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes else None)
 
@@ -41,7 +42,7 @@ def main() -> None:
         try:
             if sizes is not None and name == "traffic":
                 rows = mod.run(sizes=tuple(sizes))
-            elif sizes is not None and name in ("ablation", "pipeline"):
+            elif sizes is not None and name in ("ablation", "pipeline", "e2e"):
                 rows = mod.run(t=sizes[-1])
             else:
                 rows = mod.run()

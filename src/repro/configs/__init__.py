@@ -15,12 +15,14 @@ _MODULES = {
     "qwen2-vl-7b": "qwen2_vl_7b",
     # paper benchmark setting (not part of the 10 assigned archs)
     "deepseek-v3-bench": "deepseek_v3_bench",
-    # cross-layer stream setting (not part of the 10 assigned archs)
+    # cross-layer stream settings (not part of the 10 assigned archs)
     "moe-ffn-stream": "moe_ffn_stream",
+    "moe-tx-stream": "moe_tx_stream",
 }
 
 ARCH_IDS = tuple(k for k in _MODULES
-                 if k not in ("deepseek-v3-bench", "moe-ffn-stream"))
+                 if k not in ("deepseek-v3-bench", "moe-ffn-stream",
+                              "moe-tx-stream"))
 
 
 def get_arch(name: str):

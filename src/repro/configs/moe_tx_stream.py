@@ -1,0 +1,32 @@
+"""Attention-separated MoE transformer — the real-model stream setting.
+
+Real MoE transformers interleave attention between expert layers; the
+``moe_tx`` family puts that shape inside the fused schedule: each layer is a
+*parallel* attention+MoE block (``h <- h + attn(ln1 h) + moe(ln2 h)``,
+PaLM/GPT-J-style) so the attention compute is tail-independent, and a stream
+block fuses N consecutive layers into ONE shard_map island that owns the
+attention collectives (``layers/moe.stream_tx_layers``) — a
+``dcomm.PipeTail`` stays in flight across the attention block instead of
+hitting an island boundary.  Run with ``--engine fused_pipe --moe-stream
+<block>`` (the moe_tx stream knob; add ``--moe-interleave K`` to also
+round-robin K token micro-batch lanes through each block), or
+``--moe-stream 0`` for the per-layer-barrier baseline the benchmarks compare
+against.  Not one of the assigned archs (excluded from ARCH_IDS, like
+moe-ffn-stream).
+"""
+
+from repro.configs.base import ArchConfig, MoESpec
+
+ARCH = ArchConfig(
+    name="moe-tx-stream-1b",
+    family="moe_tx",
+    n_layers=16,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=0,
+    vocab=32768,
+    moe=MoESpec(n_experts=64, top_k=4, d_ff_expert=1024),
+    source="attention-separated stream setting (tail in flight across attention)",
+)

@@ -42,8 +42,13 @@ fused_pipe    1          capacity   **yes**     Same flat plan, but the staging 
                                                 tail-independent work that FILLS
                                                 lane j's boundary window (count
                                                 from ``pipesim.plan_interleaved_
-                                                stream``).  Still open: a K=1 pure
-                                                MoE chain leaves the window empty.
+                                                stream``).  ``fusco.tx_layer_
+                                                stream`` fills it at K=1 with the
+                                                ATTENTION block of a parallel
+                                                attention+MoE transformer layer
+                                                (count from ``pipesim.plan_tx_
+                                                stream``); a pure MoE chain still
+                                                leaves the K=1 window empty.
 fused_hier    2          capacity   no          Node-level forwarding with dedup (one
                                                 copy per token per destination node,
                                                 forwarder lane picked by the Online
@@ -226,18 +231,23 @@ def flat_combine(expert_out: jax.Array, res: DispatchResult,
 
 def pipe_geometry(t: int, k: int, d: int, itemsize: int,
                   placement: ExpertPlacement, cfg: DcommConfig,
-                  n_layers: int = 1, interleave: int = 1) -> tuple[int, int]:
+                  n_layers: int = 1, interleave: int = 1,
+                  attn_s: float = 0.0) -> tuple[int, int]:
     """(capacity, n_slices) for a pipelined shuffle — static trace-time plan.
 
     ``t`` is the tokens of ONE shuffle (one micro-batch lane when the caller
     interleaves).  S is ``cfg.pipe_slices`` when set; else the pipesim knee
     for the staging buffer's byte volume at the config's hardware point: the
     *joint* cross-layer knee from :func:`pipesim.plan_layer_stream` when the
-    shuffle is one layer of an ``n_layers`` stream, and the interleaved-
+    shuffle is one layer of an ``n_layers`` stream, the interleaved-
     schedule knee from :func:`pipesim.plan_interleaved_stream` (full-layer
     payload = ``interleave`` lanes) when micro-batches are interleaved
-    through it.  Clamped so every slice keeps at least one row per
-    (lane, expert) sub-slot; capacity is rounded up to a multiple of S.
+    through it, and the attention-filled knee from
+    :func:`pipesim.plan_tx_stream` when ``attn_s > 0`` (the caller's estimate
+    of per-lane attention compute seconds — the tail-independent window
+    filler of the ``moe_tx`` stream).  Clamped so every slice keeps at least
+    one row per (lane, expert) sub-slot; capacity is rounded up to a
+    multiple of S.
     """
     e_local = placement.experts_per_lane
     cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
@@ -249,7 +259,11 @@ def pipe_geometry(t: int, k: int, d: int, itemsize: int,
                                stage_bw=cfg.pipe_stage_bw,
                                wire_bw=cfg.pipe_wire_bw,
                                per_slice_overhead_s=cfg.pipe_overhead_s)
-        if interleave > 1:
+        if attn_s > 0.0:
+            s = pipesim.plan_tx_stream(
+                p, max(1, n_layers), max(1, interleave), attn_s,
+                payload_bytes=payload * max(1, interleave))["n_slices"]
+        elif interleave > 1:
             s = pipesim.plan_interleaved_stream(
                 p, max(1, n_layers), interleave,
                 payload_bytes=payload * interleave)["n_slices"]

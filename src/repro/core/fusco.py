@@ -16,6 +16,14 @@ interleaved round-robin through it so micro-batch j+1's router + expert FFN
 fills micro-batch j's boundary window.  :func:`stream_dense_reference` is the
 stacked dense oracle for both (the stream is order-preserving per token, so
 the oracle is interleave-invariant).
+
+:func:`tx_layer_stream` extends the stream to ATTENTION-separated layers —
+real transformer blocks: N parallel attention+MoE blocks
+(``h + attn(ln1 h) + moe(ln2 h)``) through one schedule, the MoE tail combine
+of each layer riding across that layer's attention block (the attention
+collectives — the k/v all-gather over the EP axes — live inside the island,
+:func:`tx_attention`).  Oracle: :func:`tx_dense_reference`.  See DESIGN.md
+§attention-stream.
 """
 
 from __future__ import annotations
@@ -28,7 +36,8 @@ import jax.numpy as jnp
 from repro.core import dcomm
 from repro.core.dcomm import DcommConfig, DispatchResult
 from repro.core.routing import (ExpertPlacement, router_logits, top_k_routing)
-from repro.layers.common import rms_norm
+from repro.layers.attention import gqa_project, reference_attention
+from repro.layers.common import apply_rope, rms_norm
 
 
 def swiglu_experts(rows: jax.Array, w1: jax.Array, w3: jax.Array,
@@ -299,6 +308,229 @@ def interleaved_layer_stream(x: jax.Array, w_router: jax.Array,
             for j in range(kk)]
     h = jnp.concatenate(outs, axis=0)
     return h if traffic is None else (h, new_traffic)
+
+
+# ---------------------------------------------------------------------------
+# Attention-separated stream (moe_tx): real transformer blocks inside the
+# fused schedule
+# ---------------------------------------------------------------------------
+
+def tx_attention(h: jax.Array, lp, pos_q: jax.Array, pos_k: jax.Array, *,
+                 n_heads: int, n_kv: int, head_dim: int,
+                 rope_theta: float = 1e6, ep_axes=(), return_kv: bool = False):
+    """Attention sub-layer of a ``moe_tx`` parallel block.
+
+    ``h`` is (b, s_local, d) — this shard's batch rows over its sequence
+    chunk.  Inside the island ``ep_axes`` names the mesh axes the sequence is
+    sharded over: q/k/v are projected from the local rows, RoPE'd at their
+    absolute positions (``pos_q``), and k/v are **all-gathered over the EP
+    axes** — these are the attention collectives the island owns, which is
+    what lets a :class:`dcomm.PipeTail` stay in flight across the attention
+    block instead of forcing an island boundary (and its program barrier)
+    between every MoE layer.  With empty ``ep_axes`` this is the plain
+    full-sequence attention the oracle uses.  ``return_kv`` additionally
+    returns the gathered, RoPE'd (k, v) — identical on every EP lane — for
+    prefill cache extraction.
+    """
+    u = rms_norm(h, lp["ln1"])
+    q, k, v = gqa_project(u, lp["wq"], lp["wk"], lp["wv"], n_heads, n_kv,
+                          head_dim)
+    q = apply_rope(q, pos_q, rope_theta)
+    k = apply_rope(k, pos_q, rope_theta)
+    for ax in reversed(tuple(ep_axes)):      # inner axis first: global order
+        k = jax.lax.all_gather(k, ax, axis=1, tiled=True)
+        v = jax.lax.all_gather(v, ax, axis=1, tiled=True)
+    a = reference_attention(q, k, v, pos_q, pos_k, causal=True)
+    b, s = h.shape[0], h.shape[1]
+    out = a.reshape(b, s, n_heads * head_dim) @ lp["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _tx_attn_cost_s(tc: int, s_l: int, bc: int, s_glob: int, n_heads: int,
+                    head_dim: int, itemsize: int, cfg: DcommConfig) -> float:
+    """Planning proxy for the attention window filler: the byte volume the
+    attention block moves through the staging tier (q/k/v/o activations +
+    f32 score/prob tiles), converted to seconds at the config's staging
+    bandwidth.  Deliberately coarse — it only has to place the pipesim knee,
+    not predict wall clock."""
+    attn_bytes = (4.0 * tc * n_heads * head_dim * itemsize
+                  + 2.0 * 4.0 * bc * n_heads * s_l * s_glob)
+    return attn_bytes / cfg.pipe_stage_bw
+
+
+def tx_layer_stream(x: jax.Array, positions: jax.Array, params, placement,
+                    cfg: DcommConfig, top_k: int, *, n_heads: int, n_kv: int,
+                    head_dim: int, rope_theta: float = 1e6,
+                    norm_topk: bool = True, stream: bool = True,
+                    interleave: int = 1, traffic=None, observe=None,
+                    return_kv: bool = False):
+    """Chain N attention+MoE transformer blocks through ONE fused schedule.
+
+    ``x`` is (b, s_local, d) — this shard's rows (batch data-sharded by the
+    caller, sequence sharded over the EP axes); ``positions`` the full (S,)
+    absolute positions; ``params`` the stacked per-layer dict
+    ``{ln1, wq, wk, wv, wo, ln2, router, w1, w3, w2}`` (attention weights
+    replicated, expert weights this lane's slices).
+
+    Each layer is a **parallel** transformer block
+
+        ``h <- h + attn(rms_norm(h, ln1)) + moe(rms_norm(h, ln2))``
+
+    (PaLM/GPT-J-style; both branches read the block input), chosen precisely
+    because it makes the attention block *tail-independent*: the MoE shuffle
+    is issued first and ends with its tail combine exchange in flight
+    (:class:`dcomm.PipeTail`), then the attention block — which has no data
+    dependence on the in-flight exchange — runs while the tail is on the
+    wire, and the tail lands only in the next layer's prologue.  A
+    *sequential* block (attention reading the completed MoE output) admits
+    no such work at K=1: every op after the MoE needs the tail, which is why
+    the pure-MoE chain's window stayed empty (ROADMAP) and why MegaScale-MoE
+    gets its window-filling compute precisely from attention.
+    ``pipesim.simulate_tx_stream`` models this schedule and quantifies the
+    boundary-bubble reduction vs the pure chain.
+
+    Composes with ``interleave=K``: K batch-chunk micro-batch lanes
+    round-robin through the schedule as in
+    :func:`interleaved_layer_stream`, so lane j's tail additionally rides
+    across lanes j+1..K-1's whole blocks (shuffle staging + attention).
+
+    The slice count is chosen jointly for the chain via
+    :func:`pipesim.plan_tx_stream` with the attention cost proxy
+    (:func:`_tx_attn_cost_s`); ``stream=False`` (or a non-pipelined engine)
+    runs the same function with a full per-layer barrier.
+
+    ``traffic``/``observe`` as in :func:`pipe_layer_stream`.  ``return_kv``
+    appends the per-layer gathered RoPE'd (k, v) stacks for prefill cache
+    extraction.  Returns ``h`` with ``(h, traffic)`` / ``(..., kv)``
+    appended per flag.  Gradient-parity with :func:`tx_dense_reference` is
+    covered by ``tests/test_engine_grads.py``.
+    """
+    ep_axes = (tuple(cfg.ep_axis) if isinstance(cfg.ep_axis, (tuple, list))
+               else (cfg.ep_axis,))
+    b, s_l, d = x.shape
+    chunk = dcomm._lane_index(cfg, placement)
+    pos_q = jax.lax.dynamic_slice(positions, (chunk * s_l,), (s_l,))
+    attn_kw = dict(n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+                   rope_theta=rope_theta, ep_axes=ep_axes)
+
+    if not (stream and cfg.engine == "fused_pipe"):
+        # per-layer-barrier fallback: same parallel blocks, any engine
+        def layer(h, xs):
+            lp, tr = xs if traffic is not None else (xs, None)
+            a = tx_attention(h, lp, pos_q, positions, return_kv=return_kv,
+                             **attn_kw)
+            kv = None
+            if return_kv:
+                a, kv = a
+            u2 = rms_norm(h, lp["ln2"]).reshape(b * s_l, d)
+            logits = router_logits(u2, lp["router"])
+            A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
+            if tr is not None:
+                tr = observe(tr, A)
+            y = shuffle_ffn(u2, A, gates.astype(h.dtype), lp["w1"], lp["w3"],
+                            lp["w2"], placement, cfg)
+            return h + a + y.reshape(b, s_l, d), (tr, kv)
+
+        h, (new_traffic, kv) = jax.lax.scan(
+            layer, x, params if traffic is None else (params, traffic))
+        out = (h,)
+        if traffic is not None:
+            out += (new_traffic,)
+        if return_kv:
+            out += (kv,)
+        return out[0] if len(out) == 1 else out
+
+    kk = max(1, int(interleave))
+    if b % kk != 0:
+        raise ValueError(
+            f"interleave={kk} must divide the island's per-shard batch {b} "
+            "(micro-batch lanes are batch chunks)")
+    bc = b // kk
+    tc = bc * s_l
+    n_layers = params["router"].shape[0]
+    attn_s = _tx_attn_cost_s(tc, s_l, bc, positions.shape[0], n_heads,
+                             head_dim, x.dtype.itemsize, cfg)
+    cap, ns = dcomm.pipe_geometry(tc, top_k, d, x.dtype.itemsize, placement,
+                                  cfg, n_layers=n_layers, interleave=kk,
+                                  attn_s=attn_s)
+    cfg = dataclasses.replace(cfg, pipe_slices=ns)    # freeze the joint plan
+    cs = cap // ns
+
+    def layer(carry, xs):
+        lp, tr = xs if traffic is not None else (xs, None)
+        hs, tails = carry
+        ffn = lambda rows: swiglu_experts(rows, lp["w1"], lp["w3"], lp["w2"])
+        new_h, new_tails, As, kfs, vfs = [], [], [], [], []
+        for j in range(kk):               # round-robin over micro-batch lanes
+            tail = jax.tree.map(lambda a, j=j: a[j], tails)
+            ht = dcomm.pipe_tail_consume(hs[j].reshape(tc, d), tail, tc)
+            h = ht.reshape(bc, s_l, d)
+            # MoE branch issued FIRST: router -> sliced dispatch/FFN -> tail
+            # combine exchange, which then rides across the attention below
+            u2 = rms_norm(h, lp["ln2"]).reshape(tc, d)
+            logits = router_logits(u2, lp["router"])
+            A, gates = top_k_routing(logits, top_k, normalize=norm_topk)
+            y, tail = dcomm.pipe_shuffle_ffn_stream(
+                u2, A, gates.astype(h.dtype), ffn, placement, cfg, y0=ht)
+            # attention branch reads the block INPUT h (parallel block):
+            # tail-independent compute placed exactly in the tail's window
+            a = tx_attention(h, lp, pos_q, positions, return_kv=return_kv,
+                             **attn_kw)
+            if return_kv:
+                a, (kf, vf) = a
+                kfs.append(kf)
+                vfs.append(vf)
+            new_h.append(y.reshape(bc, s_l, d) + a)
+            new_tails.append(tail)
+            As.append(A)
+        if tr is not None:
+            tr = observe(tr, jnp.concatenate(As, axis=0))
+        kv = ((jnp.concatenate(kfs, 0), jnp.concatenate(vfs, 0))
+              if return_kv else None)
+        return ((jnp.stack(new_h),
+                 jax.tree.map(lambda *a: jnp.stack(a), *new_tails)),
+                (tr, kv))
+
+    tails0 = dcomm.pipe_empty_tails(placement, cs, d, x.dtype, x.dtype, kk)
+    (hs, tails), (new_traffic, kv) = jax.lax.scan(
+        layer, (x.reshape(kk, bc, s_l, d), tails0),
+        params if traffic is None else (params, traffic))
+    # epilogue: land every lane's final tail
+    outs = [dcomm.pipe_tail_consume(hs[j].reshape(tc, d),
+                                    jax.tree.map(lambda a, j=j: a[j], tails),
+                                    tc)
+            for j in range(kk)]
+    h = jnp.concatenate(outs, axis=0).reshape(b, s_l, d)
+    out = (h,)
+    if traffic is not None:
+        out += (new_traffic,)
+    if return_kv:
+        out += (kv,)
+    return out[0] if len(out) == 1 else out
+
+
+def tx_dense_reference(x: jax.Array, positions: jax.Array, params,
+                       top_k: int, *, n_heads: int, n_kv: int, head_dim: int,
+                       rope_theta: float = 1e6,
+                       norm_topk: bool = True) -> jax.Array:
+    """Oracle for the attention-separated stream: the same parallel
+    attention+MoE residual chain evaluated with full-sequence attention and
+    the per-token dense MoE reference.  ``params`` holds ALL experts per
+    layer (w1/w3 ``(N, E, d, f)``, w2 ``(N, E, f, d)``); ``x`` is the full
+    (b, S, d) batch."""
+    b, s, d = x.shape
+    h = x
+    for l in range(params["router"].shape[0]):
+        lp = jax.tree.map(lambda a, l=l: a[l], params)
+        a = tx_attention(h, lp, positions, positions, n_heads=n_heads,
+                         n_kv=n_kv, head_dim=head_dim, rope_theta=rope_theta)
+        u2 = rms_norm(h, lp["ln2"]).reshape(b * s, d)
+        m = dense_moe_reference(u2, lp["router"], lp["w1"], lp["w3"],
+                                lp["w2"], top_k, norm_topk=norm_topk)
+        h = h + a + m.reshape(b, s, d)
+    return h
 
 
 def layer_stream(x: jax.Array, w_router: jax.Array, w1: jax.Array,

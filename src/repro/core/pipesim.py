@@ -271,6 +271,118 @@ def simulate_interleaved_stream(p: PipeParams, n_slices: int, n_layers: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Attention-separated stream (moe_tx: parallel attention+MoE transformer
+# blocks — the attention block is tail-independent compute scheduled between
+# a layer's tail combine issue and its consume at the next layer)
+# ---------------------------------------------------------------------------
+
+def simulate_tx_stream(p: PipeParams, n_slices: int, n_layers: int,
+                       attn_s: float, interleave: int = 1) -> dict:
+    """Event model of the attention-separated cross-layer stream.
+
+    Models the schedule ``fusco.tx_layer_stream`` runs over ``n_layers``
+    *parallel* attention+MoE transformer blocks: per layer (per micro-batch
+    lane when interleaved), the MoE shuffle is issued FIRST (``n_slices``
+    staged + exchanged slices, tail combine exchange issued), then the
+    attention block — ``attn_s`` seconds of compute that reads the block
+    *input* and is therefore independent of the in-flight tail — runs while
+    the tail is on the wire; the tail lands only in that lane's next-layer
+    prologue.  This is exactly what a pure MoE chain lacks: with
+    ``attn_s == 0`` and ``interleave == 1`` this IS
+    :func:`simulate_interleaved_stream`'s chained K=1 schedule, so comparing
+    ``attn_s > 0`` against it at equal slice counts quantifies what the
+    attention window-filler buys.  Composes with ``interleave``: lane j+1's
+    whole block (shuffle staging + attention) also sits in lane j's window.
+
+    Reported bubbles as in :func:`simulate_interleaved_stream`:
+    ``bubble_fraction`` (total compute idle / makespan) and
+    ``boundary_bubble_fraction`` (idle attributable to waiting on a deferred
+    tail + the final tail drain).  Attention counts as compute busy time.
+    """
+    k = max(1, int(interleave))
+    n = max(1, int(n_slices))
+    a = max(0.0, float(attn_s))
+    slice_bytes = p.payload_bytes / (k * n)
+    stage_t = slice_bytes / p.stage_bw + p.per_slice_overhead_s
+    wire_t = slice_bytes / p.wire_bw
+
+    t_comp = 0.0
+    t_wire = 0.0
+    tail_done = [0.0] * k
+    boundary_stall = 0.0
+    for _layer in range(n_layers):
+        for j in range(k):
+            wire_done = [0.0] * n
+            for s in range(n):
+                start = t_comp
+                if s == 0:             # router reads the completed h: wait
+                    start = max(start, tail_done[j])
+                    boundary_stall += start - t_comp
+                if s >= p.ring_slots:  # bounded ring, as in simulate()
+                    start = max(start, wire_done[s - p.ring_slots])
+                t_comp = start + stage_t
+                t_wire = max(t_wire, t_comp) + wire_t      # dispatch exchange
+                wire_done[s] = t_wire
+            t_wire = max(t_wire, t_comp) + wire_t          # tail combine
+            tail_done[j] = t_wire
+            t_comp += a          # attention: tail-independent window filler
+    makespan = max(t_comp, max(tail_done))
+    boundary_stall += makespan - t_comp                    # final tail drain
+    busy = n_layers * k * (n * stage_t + a)
+    out = {
+        "n_layers": n_layers,
+        "interleave": k,
+        "n_slices": n,
+        "attn_s": a,
+        "slice_bytes": slice_bytes,
+        "total_s": makespan,
+        "compute_busy_s": busy,
+        "bubble_fraction": (makespan - busy) / makespan,
+        "boundary_stall_s": boundary_stall,
+        "boundary_bubble_fraction": boundary_stall / makespan,
+        "wire_bound_s": n_layers * p.payload_bytes / p.wire_bw,
+        "efficiency": (n_layers * p.payload_bytes / p.wire_bw) / makespan,
+    }
+    if a > 0 or k > 1:
+        pure = simulate_interleaved_stream(p, n, n_layers, 1)
+        out["pure_chained_boundary_bubble_fraction"] = (
+            pure["boundary_bubble_fraction"])
+        out["boundary_bubble_reduction_vs_pure_chained"] = (
+            pure["boundary_bubble_fraction"] - out["boundary_bubble_fraction"])
+    return out
+
+
+def _makespan_knee(p: PipeParams, simulate_fn,
+                   payload_bytes: float | None, max_slices: int | None) -> dict:
+    """Shared slice-count sweep for the statically-shaped stream planners:
+    power-of-two counts, makespan knee, smallest count on ties."""
+    if payload_bytes is not None:
+        p = dataclasses.replace(p, payload_bytes=float(payload_bytes))
+    counts = [1 << i for i in range(11)]
+    if max_slices is not None:
+        counts = [n for n in counts if n <= max_slices] or [1]
+    return min((simulate_fn(p, n) for n in counts),
+               key=lambda r: (round(r["total_s"], 12), r["n_slices"]))
+
+
+def plan_tx_stream(p: PipeParams, n_layers: int, interleave: int,
+                   attn_s: float, payload_bytes: float | None = None,
+                   max_slices: int | None = None) -> dict:
+    """Joint slice plan for the attention-separated stream: ONE static slice
+    count shared by every (layer, micro-batch lane) shuffle of the tx chain.
+
+    ``payload_bytes`` is the FULL per-layer MoE payload (all K lanes); each
+    lane stages ``payload/K``.  Sweeps slice counts and picks the makespan
+    knee — attention widens the window a deferred tail can hide in, which can
+    move the knee relative to :func:`plan_interleaved_stream`'s pure-MoE pick.
+    """
+    return _makespan_knee(
+        p, lambda pp, n: simulate_tx_stream(pp, n, n_layers, attn_s,
+                                            interleave),
+        payload_bytes, max_slices)
+
+
 def plan_interleaved_stream(p: PipeParams, n_layers: int, interleave: int,
                             payload_bytes: float | None = None,
                             max_slices: int | None = None) -> dict:
@@ -282,12 +394,7 @@ def plan_interleaved_stream(p: PipeParams, n_layers: int, interleave: int,
     statically-shaped engine's knob) and picks the makespan knee — more
     slices pipeline better within a lane but pay K× the per-slice overhead.
     """
-    if payload_bytes is not None:
-        p = dataclasses.replace(p, payload_bytes=float(payload_bytes))
-    counts = [1 << i for i in range(11)]
-    if max_slices is not None:
-        counts = [n for n in counts if n <= max_slices] or [1]
-    best = min((simulate_interleaved_stream(p, n, n_layers, interleave)
-                for n in counts),
-               key=lambda r: (round(r["total_s"], 12), r["n_slices"]))
-    return best
+    return _makespan_knee(
+        p, lambda pp, n: simulate_interleaved_stream(pp, n, n_layers,
+                                                     interleave),
+        payload_bytes, max_slices)

@@ -272,10 +272,30 @@ def _expert_home_flat(placement) -> np.ndarray:
 def migration_gather_index(old_placement, new_placement) -> jax.Array:
     """Flat source row (old layout) per destination slot (new layout):
     ``new_w.reshape(ep*spl_new, ...)[i] = old_w.reshape(ep*spl_old, ...)[idx[i]]``.
-    Replicas source from the old placement's replica-0 copy."""
+    Replicas source from the old placement's replica-0 copy — the locality
+    view :func:`migration_stats` costs bytes with.  The actual weight
+    migration (:func:`migrate_lane_major`) does NOT use this single-source
+    map: it averages over the old replicas first, see below."""
     home = _expert_home_flat(old_placement)
     new_tbl = placement_table(new_placement)
     return jnp.asarray(home[new_tbl.reshape(-1)], I32)
+
+
+def replica_mean_canonical(flat: jax.Array, placement) -> jax.Array:
+    """Flat lane-major expert blocks ``(ep*spl, ...)`` → canonical per-expert
+    blocks ``(n_experts, ...)``, AVERAGING over each expert's replica slots.
+
+    Replicated experts receive independent gradient shares on every hosting
+    lane (each replica serves a round-robin share of the expert's tokens) and
+    drift apart over training steps; the replica mean is the consensus state
+    a relayout must carry forward.  Accumulates in f32, returns ``flat``'s
+    dtype."""
+    tbl = jnp.asarray(placement_table(placement).reshape(-1), I32)
+    counts = jnp.asarray(replica_counts(placement), jnp.float32)
+    canon = jnp.zeros((placement.n_experts,) + flat.shape[1:],
+                      jnp.float32).at[tbl].add(flat.astype(jnp.float32))
+    canon = canon / counts.reshape((-1,) + (1,) * (flat.ndim - 1))
+    return canon.astype(flat.dtype)
 
 
 def migrate_lane_major(w: jax.Array, old_placement, new_placement,
@@ -283,13 +303,23 @@ def migrate_lane_major(w: jax.Array, old_placement, new_placement,
     """Re-layout lane-major expert weights ``(..., ep, e_local, ...)`` from
     ``old_placement`` to ``new_placement`` — the between-steps gather/permute
     of ``w1``/``w3``/``w2`` expert blocks.  ``lane_axis`` locates the ``ep``
-    dim (``e_local`` must follow it)."""
-    idx = migration_gather_index(old_placement, new_placement)
+    dim (``e_local`` must follow it).
+
+    Every destination slot sources from the **replica mean** of its expert's
+    old copies (:func:`replica_mean_canonical`).  Sourcing from replica 0
+    (the previous behavior) silently dropped the other replicas' optimizer
+    updates at every relayout — replicas see disjoint token shares and drift
+    apart during training, so their mean, not an arbitrary copy, is the
+    state to carry forward.  When all replicas agree (fresh replication,
+    evaluation) the mean IS each copy, so nothing changes there.
+    """
     ep_new = new_placement.ep
     spl_new = new_placement.experts_per_lane
     w = jnp.moveaxis(jnp.moveaxis(w, lane_axis, 0), lane_axis + 1, 1)
     flat = w.reshape((w.shape[0] * w.shape[1],) + w.shape[2:])
-    out = jnp.take(flat, idx, axis=0).reshape(
+    canon = replica_mean_canonical(flat, old_placement)
+    new_tbl = jnp.asarray(placement_table(new_placement).reshape(-1), I32)
+    out = jnp.take(canon, new_tbl, axis=0).reshape(
         (ep_new, spl_new) + flat.shape[1:])
     return jnp.moveaxis(jnp.moveaxis(out, 1, lane_axis + 1), 0, lane_axis)
 

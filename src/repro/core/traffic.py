@@ -56,7 +56,7 @@ def init_traffic_state(n_experts: int, ep: int,
 
 
 def observe(state: TrafficState, A: jax.Array, placement, src_lane,
-            decay: float = 0.99, axis_names=()) -> TrafficState:
+            decay: float = 0.99, axis_names=(), valid=None) -> TrafficState:
     """Fold one routing matrix into the EMA accumulators.
 
     Args:
@@ -70,13 +70,22 @@ def observe(state: TrafficState, A: jax.Array, placement, src_lane,
          callers, e.g. benchmarks, where tokens span all lanes).
       axis_names: mesh axes to psum the per-step counts over (the island's
          data + EP axes); empty for single-process/global use.
+      valid: optional (T,) bool — rows with ``valid == False`` (serving
+         prefill left-pad slots, interleave pad rows) are routed like any
+         other row (static shapes) but contribute NOTHING to either
+         accumulator, so pad traffic cannot skew the placement signal.
 
     Counts are integers derived from ``A`` — no gradient flows; the update is
     pure and statically shaped, safe under jit/scan/grad.
     """
     t = A.shape[0]
     n_nodes = placement.n_nodes
-    e_cnt = group_counts(A.reshape(-1), placement.n_experts).astype(F32)
+    if valid is None:
+        a_rows = A.reshape(-1)
+    else:
+        # invalid rows get the -1 sentinel group_counts ignores
+        a_rows = jnp.where(valid[:, None], A, -1).reshape(-1)
+    e_cnt = group_counts(a_rows, placement.n_experts).astype(F32)
 
     replica = balanced_replica_choice(A, placement)
     lane = placement.lane_of_expert(A, replica)               # (T, K)
@@ -88,6 +97,8 @@ def observe(state: TrafficState, A: jax.Array, placement, src_lane,
         jnp.arange(t)[:, None], node].set(True)
     cross = (uses & (jnp.arange(n_nodes)[None, :] != my_node[:, None])).sum(
         axis=1).astype(F32)                                   # (T,)
+    if valid is not None:
+        cross = cross * valid.astype(F32)
     lane_cnt = jnp.zeros((placement.ep,), F32).at[src_lane].add(cross)
 
     for ax in axis_names:

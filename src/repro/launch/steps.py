@@ -47,11 +47,11 @@ def decode_batch_specs(cfg: ArchConfig, shape: ShapeConfig, ctx: ModelContext):
 def accum_fuses_into_stream(bundle: zoo.ModelBundle, accum: int) -> bool:
     """True when the gradient-accumulation micro-batches can feed the
     interleaved layer stream's lanes instead of a serial scan: a ``moe_ffn``
-    stack on the ``fused_pipe`` engine (the only schedule that actually
-    interleaves — the barrier fallback ignores the lane split) whose
-    ``moe_interleave`` equals ``accum``."""
+    or ``moe_tx`` stack on the ``fused_pipe`` engine (the only schedule that
+    actually interleaves — the barrier fallback ignores the lane split)
+    whose ``moe_interleave`` equals ``accum``."""
     ctx = bundle.ctx
-    return (accum > 1 and bundle.cfg.family == "moe_ffn"
+    return (accum > 1 and bundle.cfg.family in ("moe_ffn", "moe_tx")
             and getattr(ctx, "dcfg", None) is not None
             and ctx.dcfg.engine == "fused_pipe"
             and getattr(ctx, "moe_interleave", 1) == accum)

@@ -172,16 +172,19 @@ def main(argv=None):
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--moe-stream", type=int, default=0,
-                    help="moe_ffn family: layers per cross-layer stream "
-                         "block (fused_pipe overlaps combine of layer i with "
-                         "dispatch of layer i+1 inside a block); 0 = "
-                         "per-layer islands")
+                    help="moe_ffn/moe_tx families: layers per cross-layer "
+                         "stream block (fused_pipe overlaps combine of layer "
+                         "i with dispatch of layer i+1 inside a block; for "
+                         "moe_tx the tail additionally rides across the "
+                         "attention block — this is the moe-tx-stream knob); "
+                         "0 = per-layer islands")
     ap.add_argument("--moe-interleave", type=int, default=1,
-                    help="moe_ffn family: token micro-batches interleaved "
-                         "through each stream block (K lanes round-robin "
-                         "through one schedule — lane j+1's router/FFN fills "
-                         "lane j's boundary window); must divide the "
-                         "per-shard batch; 1 = plain chained stream")
+                    help="moe_ffn/moe_tx families: token micro-batches "
+                         "interleaved through each stream block (K lanes "
+                         "round-robin through one schedule — lane j+1's "
+                         "compute fills lane j's boundary window); must "
+                         "divide the per-shard batch; 1 = plain chained "
+                         "stream")
     ap.add_argument("--accum", type=int, default=1,
                     help="gradient-accumulation micro-batches; when it "
                          "equals --moe-interleave on a moe_ffn arch the "
@@ -211,7 +214,7 @@ def main(argv=None):
                        traffic_decay=args.traffic_decay)
     # resuming a run that relayouted: the checkpoint's weights are laid out
     # per the placement-history sidecar, not the arithmetic map
-    if cfg.moe is not None and cfg.family in ("moe", "moe_ffn"):
+    if cfg.moe is not None and cfg.family in ("moe", "moe_ffn", "moe_tx"):
         history = load_placement_history(args.ckpt_dir, cfg.moe.n_experts)
         committed = checkpointer.latest_step(args.ckpt_dir)
         if history is not None and committed is not None:
@@ -244,7 +247,7 @@ def main(argv=None):
         serial_accum = (args.accum > 1
                         and not steps_mod.accum_fuses_into_stream(bundle,
                                                                   args.accum))
-        if cfg.moe is not None and cfg.family in ("moe", "moe_ffn"):
+        if cfg.moe is not None and cfg.family in ("moe", "moe_ffn", "moe_tx"):
             if serial_accum:
                 # the serial microbatch scan does not thread traffic state
                 # yet; the fused path (--moe-interleave == --accum on a

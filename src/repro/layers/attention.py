@@ -256,6 +256,33 @@ def sharded_flash_attention(q, k, v, q_positions, k_positions, *, mesh,
     return out[:, :, :hq]
 
 
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array, k_positions: jax.Array,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Plain (materialised-scores) GQA attention with position-based masking.
+
+    q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd); positions are the ABSOLUTE
+    positions of the q/k rows, so q may be any contiguous chunk of a longer
+    sequence (the sequence-sharded shard_map islands call it with local q
+    against all-gathered k/v).  Unlike :func:`flash_attention`, no block
+    skipping is applied, so shifted ``q_positions`` are always masked
+    correctly; O(Sq·Sk) — island/test geometries only.
+    """
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = hd ** -0.5
+    qr = q.reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k).astype(jnp.float32) * scale
+    mask = _block_mask(q_positions, k_positions, causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v)
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, hkv, g, hd).reshape(
+        b, sq, hq, hd)
+
+
 class KVCache(NamedTuple):
     k: jax.Array          # (B, C, Hkv, hd) — C = min(max_len, window)
     v: jax.Array

@@ -5,7 +5,7 @@ shuffle runs manually over the expert-parallel axes with the engine picked by
 ``DcommConfig`` (fused_flat / fused_pipe / fused_hier / disagg / ragged).
 This is the "thin adaptation layer" of paper §4.
 
-Two island granularities:
+Three island granularities:
 
   * :func:`moe_block` — ONE MoE layer per island (norm + residual live
     outside); every layer ends with a full barrier before the next.
@@ -14,6 +14,11 @@ Two island granularities:
     engine the combine of layer i overlaps the dispatch of layer i+1
     (cross-layer stream), so each layer's pre-norm and residual run inside
     the island too.
+  * :func:`stream_tx_layers` — a BLOCK of attention+MoE transformer layers
+    (parallel blocks) in one island that ALSO owns the attention
+    collectives (k/v all-gather over the EP axes): the MoE tail combine of
+    each layer rides across its attention block (``fusco.tx_layer_stream``,
+    DESIGN.md §attention-stream).
 """
 
 from __future__ import annotations
@@ -36,7 +41,8 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
               dcfg: DcommConfig, top_k: int, data_axes=("data",),
               norm_topk: bool = True, fsdp: bool = False,
               traffic: traffic_lib.TrafficState | None = None,
-              traffic_decay: float = 0.99):
+              traffic_decay: float = 0.99,
+              traffic_mask: jax.Array | None = None):
     """x: (B, S, d) global. Expert weights sharded over the EP axes.
 
     Weight layout: w1/w3 (E_lanes, E_local, d, f), w2 (E_lanes, E_local, f, d)
@@ -50,6 +56,12 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
     lane-send loads instead of the static balancer-off grouping
     (``balancer.static_assignment`` remains the ``use_balancer=False``
     ablation knob).  Returns ``(y, new_traffic)`` when given, ``y`` otherwise.
+
+    ``traffic_mask``: optional (B, S) bool validity mask (True = a real
+    token).  Masked-out positions — serving prefill left-pad slots and
+    interleave pad rows — are still ROUTED (static shapes) but no longer
+    counted by ``traffic.observe``, so pad traffic cannot skew the EMA the
+    re-layout solver acts on.
     """
     ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
     ep_axes = tuple(ep_axes)
@@ -64,7 +76,7 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
     r_spec = P(None, None)
     axis_names = tuple(data_axes) + ep_axes
 
-    def inner(xl, wr, w1, w3, w2, tr):
+    def inner(xl, wr, w1, w3, w2, tr, mask):
         if fsdp:
             w1 = jax.lax.all_gather(w1, "data", axis=3, tiled=True)
             w3 = jax.lax.all_gather(w3, "data", axis=3, tiled=True)
@@ -76,7 +88,9 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
         assignment = None
         if tr is not None:
             tr = traffic_lib.observe(tr, A, placement, _lane_index(dcfg, placement),
-                                     decay=traffic_decay, axis_names=axis_names)
+                                     decay=traffic_decay, axis_names=axis_names,
+                                     valid=None if mask is None
+                                     else mask.reshape(b * s))
             if dcfg.engine == "fused_hier" and dcfg.use_balancer:
                 assignment = balancer_lib.algorithm1_groups(
                     traffic_lib.balancer_loads(tr, placement))
@@ -85,11 +99,14 @@ def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
         return y.reshape(b, s, d), tr
 
     t_spec = jax.tree.map(lambda l: P(*([None] * l.ndim)), traffic)
+    m_spec = None if traffic_mask is None else P(data_axes, ep_axes)
     fn = shard_map(inner, mesh=mesh,
-                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, t_spec),
+                   in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, t_spec,
+                             m_spec),
                    out_specs=(x_spec, t_spec), check_vma=False)
     y, new_traffic = fn(x, moe_params["router"], moe_params["w1"],
-                        moe_params["w3"], moe_params["w2"], traffic)
+                        moe_params["w3"], moe_params["w2"], traffic,
+                        traffic_mask)
     return y if traffic is None else (y, new_traffic)
 
 
@@ -99,7 +116,8 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
                       stream: bool = True, fsdp: bool = False,
                       interleave: int = 1,
                       traffic: traffic_lib.TrafficState | None = None,
-                      traffic_decay: float = 0.99):
+                      traffic_decay: float = 0.99,
+                      traffic_mask: jax.Array | None = None):
     """A block of N consecutive MoE layers fused into ONE shard_map island.
 
     x: (B, S, d) global.  ``moe_params`` holds the block's stacked weights:
@@ -128,6 +146,10 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
     lanes) is folded into its slice inside the stream's layer scan, psum'd
     over the island's axes.  Returns ``(y, new_traffic)`` when given.  This
     is what extends the load-adaptive re-layout to the stream family.
+    ``traffic_mask``: (B, S) bool validity mask as in :func:`moe_block` —
+    the flattened mask rides the observe closure, so pad positions (prefill
+    left-pad, interleave pad rows) are excluded from the EMA in every lane
+    of every layer of the block.
     """
     ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
     ep_axes = tuple(ep_axes)
@@ -143,7 +165,7 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
     ln_spec = P(None, None)
     axis_names = tuple(data_axes) + ep_axes
 
-    def inner(xl, wr, w1, w3, w2, lnl, tr):
+    def inner(xl, wr, w1, w3, w2, lnl, tr, mask):
         if fsdp:
             w1 = jax.lax.all_gather(w1, "data", axis=4, tiled=True)
             w3 = jax.lax.all_gather(w3, "data", axis=4, tiled=True)
@@ -159,9 +181,12 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
         observe = None
         if tr is not None:
             my_lane = _lane_index(dcfg, placement)
+            # the flat (b*s,) mask is b-major like the stream's token lanes,
+            # so it lines up with the lane-concatenated A rows at any K
+            valid = mask.reshape(b * s) if mask is not None else None
             observe = lambda st, A: traffic_lib.observe(
                 st, A, placement, my_lane, decay=traffic_decay,
-                axis_names=axis_names)
+                axis_names=axis_names, valid=valid)
         # b-major flattening: rows [j*(b/K)*s, (j+1)*(b/K)*s) are exactly the
         # j-th batch chunk, so the stream's contiguous token lanes ARE the
         # micro-batches of the batch-axis split.
@@ -176,15 +201,118 @@ def stream_moe_layers(x: jax.Array, moe_params, ln: jax.Array | None, *,
         return y.reshape(b, s, d), tr
 
     t_spec = jax.tree.map(lambda l: P(*([None] * l.ndim)), traffic)
+    m_spec = None if traffic_mask is None else P(data_axes, ep_axes)
     fn = shard_map(inner, mesh=mesh,
                    in_specs=(x_spec, r_spec, w_spec, w_spec, w2_spec, ln_spec,
-                             t_spec),
+                             t_spec, m_spec),
                    out_specs=(x_spec, t_spec), check_vma=False)
     lnl = ln if ln is not None else jnp.zeros(
         (moe_params["router"].shape[0], x.shape[-1]), x.dtype)
     y, new_traffic = fn(x, moe_params["router"], moe_params["w1"],
-                        moe_params["w3"], moe_params["w2"], lnl, traffic)
+                        moe_params["w3"], moe_params["w2"], lnl, traffic,
+                        traffic_mask)
     return y if traffic is None else (y, new_traffic)
+
+
+def stream_tx_layers(x: jax.Array, moe_params, attn_params, ln1: jax.Array,
+                     ln2: jax.Array, *, mesh, placement: ExpertPlacement,
+                     dcfg: DcommConfig, top_k: int, positions: jax.Array,
+                     n_heads: int, n_kv: int, head_dim: int,
+                     rope_theta: float = 1e6, data_axes=("data",),
+                     norm_topk: bool = True, stream: bool = True,
+                     fsdp: bool = False, interleave: int = 1,
+                     traffic: traffic_lib.TrafficState | None = None,
+                     traffic_decay: float = 0.99,
+                     traffic_mask: jax.Array | None = None,
+                     return_kv: bool = False):
+    """A block of N attention+MoE transformer layers in ONE shard_map island.
+
+    The ``moe_tx`` island: batch over the data axes, sequence over the EP
+    axes — the island OWNS the attention collectives (k/v all-gather over the
+    EP axes inside ``fusco.tx_attention``), which is what lets the cross-layer
+    stream carry a ``dcomm.PipeTail`` *across an attention block* instead of
+    barriering at every layer boundary.  Each layer is the parallel block
+    ``h <- h + attn(rms_norm(h, ln1)) + moe(rms_norm(h, ln2))`` evaluated by
+    ``fusco.tx_layer_stream``; with the ``fused_pipe`` engine and
+    ``stream=True`` layer l's tail combine exchange is in flight while layer
+    l's attention (and, with ``interleave=K``, lanes j+1..K-1's whole
+    blocks) computes.
+
+    ``moe_params``: block-stacked ``{router (N, d, E), w1/w3
+    (N, E_lanes, E_local, d, f), w2 (N, E_lanes, E_local, f, d)}`` lane-major
+    over the EP axes; ``attn_params``: ``{wq, wk, wv, wo}`` stacked (N, ...)
+    and replicated (the island gathers the full sequence anyway, so TP'ing
+    the heads inside it would only re-shard the gather); ``ln1``/``ln2``:
+    (N, d) pre-norm scales; ``positions``: (S,) absolute positions.
+
+    ``traffic``/``traffic_decay``/``traffic_mask`` as in
+    :func:`stream_moe_layers`.  ``return_kv`` additionally returns the
+    block's per-layer RoPE'd full-sequence (k, v) stacks
+    ``(N, B, S, n_kv, hd)`` for prefill cache extraction.  Returns
+    ``y`` with ``(y, new_traffic)`` / trailing ``kv`` appended per flag.
+    """
+    ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
+    ep_axes = tuple(ep_axes)
+    x_spec = P(data_axes, ep_axes, None)
+    if fsdp:
+        w_spec = P(None, ep_axes, None, None, "data")
+        w2_spec = P(None, ep_axes, None, "data", None)
+    else:
+        w_spec = w2_spec = P(None, ep_axes, None, None, None)
+    r_spec = P(None, None, None)
+    ln_spec = P(None, None)
+    a_spec = jax.tree.map(lambda l: P(*([None] * l.ndim)), attn_params)
+    axis_names = tuple(data_axes) + ep_axes
+
+    def inner(xl, pos, wr, w1, w3, w2, ap, l1, l2, tr, mask):
+        if fsdp:
+            w1 = jax.lax.all_gather(w1, "data", axis=4, tiled=True)
+            w3 = jax.lax.all_gather(w3, "data", axis=4, tiled=True)
+            w2 = jax.lax.all_gather(w2, "data", axis=3, tiled=True)
+        b, s, d = xl.shape
+        n = wr.shape[0]
+        f = w1.shape[-1]
+        observe = None
+        if tr is not None:
+            my_lane = _lane_index(dcfg, placement)
+            valid = mask.reshape(b * s) if mask is not None else None
+            observe = lambda st, A: traffic_lib.observe(
+                st, A, placement, my_lane, decay=traffic_decay,
+                axis_names=axis_names, valid=valid)
+        params = {"ln1": l1, "ln2": l2, **ap, "router": wr,
+                  "w1": w1.reshape(n, -1, d, f),
+                  "w3": w3.reshape(n, -1, d, f),
+                  "w2": w2.reshape(n, -1, f, d)}
+        out = fusco.tx_layer_stream(
+            xl, pos, params, placement, dcfg, top_k, n_heads=n_heads,
+            n_kv=n_kv, head_dim=head_dim, rope_theta=rope_theta,
+            norm_topk=norm_topk, stream=stream, interleave=interleave,
+            traffic=tr, observe=observe, return_kv=return_kv)
+        if not isinstance(out, tuple):
+            out = (out,)
+        y, rest = out[0], list(out[1:])
+        new_tr = rest.pop(0) if tr is not None else None
+        kv = rest.pop(0) if return_kv else None
+        return y, new_tr, kv
+
+    t_spec = jax.tree.map(lambda l: P(*([None] * l.ndim)), traffic)
+    m_spec = None if traffic_mask is None else P(data_axes, ep_axes)
+    kv_spec = (None if not return_kv
+               else (P(None, data_axes, None, None, None),) * 2)
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(x_spec, P(None), r_spec, w_spec, w_spec, w2_spec,
+                             a_spec, ln_spec, ln_spec, t_spec, m_spec),
+                   out_specs=(x_spec, t_spec, kv_spec), check_vma=False)
+    y, new_traffic, kv = fn(x, positions, moe_params["router"],
+                            moe_params["w1"], moe_params["w3"],
+                            moe_params["w2"], attn_params, ln1, ln2, traffic,
+                            traffic_mask)
+    out = (y,)
+    if traffic is not None:
+        out += (new_traffic,)
+    if return_kv:
+        out += (kv,)
+    return out[0] if len(out) == 1 else out
 
 
 def lane_major_expert_weights(w_all: jax.Array, placement: ExpertPlacement) -> jax.Array:

@@ -29,7 +29,7 @@ from repro.layers import attention as attn_lib
 from repro.layers.attention import KVCache, attention_block, cache_update, decode_attention
 from repro.layers.common import dense_init, embed_init, rms_norm, apply_rope, apply_mrope
 from repro.layers.hybrid import hymba_mixer
-from repro.layers.moe import moe_block, stream_moe_layers
+from repro.layers.moe import moe_block, stream_moe_layers, stream_tx_layers
 from repro.layers.ssm import SsmState, mamba2_mixer
 
 
@@ -72,13 +72,14 @@ class ModelContext:
 
     @property
     def data_axes(self):
-        if self.multi_pod and self.cfg.family not in ("moe", "moe_ffn"):
+        if self.multi_pod and self.cfg.family not in ("moe", "moe_ffn",
+                                                      "moe_tx"):
             return ("pod", "data")
         return ("data",)
 
     @property
     def sp_axes(self):
-        if self.multi_pod and self.cfg.family in ("moe", "moe_ffn"):
+        if self.multi_pod and self.cfg.family in ("moe", "moe_ffn", "moe_tx"):
             return ("pod", "model")
         return ("model",)
 
@@ -198,12 +199,12 @@ def init_params(cfg: ArchConfig, key, ctx: ModelContext, dtype=jnp.bfloat16):
     d = cfg.d_model
     ks = jax.random.split(key, 8)
     layers: dict = {"ln1": jnp.ones((L, d), dtype)}
-    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+    if cfg.family in ("dense", "moe", "vlm", "hybrid", "moe_tx"):
         layers["attn"] = _attn_params(ks[0], cfg, L, dtype)
         layers["ln2"] = jnp.ones((L, d), dtype)
     if cfg.family in ("dense", "vlm", "hybrid"):
         layers["mlp"] = _mlp_params(ks[1], d, cfg.d_ff, L, dtype)
-    if cfg.family in ("moe", "moe_ffn"):
+    if cfg.family in ("moe", "moe_ffn", "moe_tx"):
         layers["moe"] = _moe_params(ks[2], cfg, ctx.placement, L, dtype)
     if cfg.family in ("ssm", "hybrid"):
         layers["ssm"] = _ssm_params(ks[3], cfg, L, dtype)
@@ -271,8 +272,65 @@ def _scan_layers(layer_fn, h, layers, cfg: ArchConfig, remat: bool):
     return jax.lax.scan(body, h, layers)
 
 
+def _tx_stack(params, h, positions, ctx: ModelContext, traffic=None,
+              traffic_mask=None, return_kv=False):
+    """moe_tx stack: layers grouped into attention-separated stream blocks —
+    one shard_map island per block (``layers/moe.stream_tx_layers``), the
+    island owning both the FUSCO shuffle and the attention collectives, so
+    inside a block layer l's MoE tail combine stays in flight across the
+    attention block instead of barriering at the layer boundary.  Returns
+    ``(final-normed h, new_traffic | None, kv | None)`` — ``kv`` is the
+    per-layer RoPE'd full-sequence cache stack ``{"k","v"}: (L, B, S, Hkv,
+    hd)`` when ``return_kv`` (prefill)."""
+    cfg = ctx.cfg
+    cd = ctx.compute_dtype
+    L = cfg.n_layers
+    blk = max(1, ctx.moe_stream)
+    if L % blk != 0:
+        raise ValueError(
+            f"moe_stream={ctx.moe_stream} must divide n_layers={L} "
+            "(every stream block needs the same static slice geometry)")
+    reblock = lambda a: a.reshape((L // blk, blk) + a.shape[1:])
+    blocks = jax.tree.map(reblock, params["layers"])
+
+    def block_fn(h, bp):
+        tr = None
+        if traffic is not None:
+            bp, tr = bp
+        bp = jax.tree.map(lambda x: x.astype(cd)
+                          if x.dtype in (jnp.float32, jnp.bfloat16) else x,
+                          bp)
+        out = stream_tx_layers(
+            h, bp["moe"], bp["attn"], bp["ln1"], bp["ln2"], mesh=ctx.mesh,
+            placement=ctx.placement, dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
+            positions=positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+            data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk,
+            fsdp=ctx.fsdp_experts, interleave=ctx.moe_interleave,
+            traffic=tr, traffic_decay=ctx.traffic_decay,
+            traffic_mask=traffic_mask, return_kv=return_kv)
+        if not isinstance(out, tuple):
+            out = (out,)
+        h, rest = out[0], list(out[1:])
+        if traffic is not None:
+            tr = rest.pop(0)
+        kv = rest.pop(0) if return_kv else None
+        return ctx.constrain(h), (tr, kv)
+
+    body = jax.checkpoint(block_fn) if ctx.remat else block_fn
+    xs = blocks if traffic is None else (blocks, jax.tree.map(reblock, traffic))
+    h, (new_traffic, kv) = jax.lax.scan(body, h, xs)
+    h = rms_norm(h, params["final_norm"].astype(cd))
+    unblock = lambda a: a.reshape((L,) + a.shape[2:])
+    if traffic is not None:
+        new_traffic = jax.tree.map(unblock, new_traffic)
+    if return_kv:
+        kv = {"k": unblock(kv[0]), "v": unblock(kv[1])}
+    return h, new_traffic, kv
+
+
 def forward_hidden(params, inputs, positions, ctx: ModelContext,
-                   traffic=None):
+                   traffic=None, traffic_mask=None):
     """inputs: (B, S) int tokens, or (B, S, d) embeddings (VLM/audio stubs).
     Returns final-norm'd hidden states (B, S, d) in compute dtype.
 
@@ -281,14 +339,17 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
     — each layer's slice rides the layer scan as xs and comes back updated as
     ys, exactly like RNG state would.  Returns ``(h, new_traffic)`` when
     given.  Supported for the ``moe`` family (per-layer islands) and the
-    ``moe_ffn`` family (slices regrouped per stream block, observed inside
-    the block island's layer-stream scan)."""
+    ``moe_ffn``/``moe_tx`` families (slices regrouped per stream block,
+    observed inside the block island's layer-stream scan).
+    ``traffic_mask``: optional (B, S) bool validity mask — pad positions are
+    excluded from the traffic counts (see ``traffic.observe``)."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
-    if traffic is not None and cfg.family not in ("moe", "moe_ffn"):
+    if traffic is not None and cfg.family not in ("moe", "moe_ffn", "moe_tx"):
         raise ValueError(
             f"traffic stats are threaded per-layer through the MoE islands; "
-            f"family {cfg.family!r} is not supported (moe / moe_ffn only)")
+            f"family {cfg.family!r} is not supported (moe / moe_ffn / moe_tx "
+            "only)")
     if inputs.ndim == 2:
         h = params["embed"].astype(cd)[inputs]
     else:
@@ -296,6 +357,16 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
     h = ctx.constrain(h)
 
     ssm_args = _ssm_args(cfg) if cfg.ssm else None
+
+    if cfg.family == "moe_tx":
+        # attention-separated MoE transformer: blocks of parallel attention+
+        # MoE layers fused into one island each — the MoE tail combine of
+        # layer l rides across layer l's attention block (fused_pipe engine;
+        # other engines run the same island with per-layer barriers).
+        h, new_traffic, _ = _tx_stack(params, h, positions, ctx,
+                                      traffic=traffic,
+                                      traffic_mask=traffic_mask)
+        return h if traffic is None else (h, new_traffic)
 
     if cfg.family == "moe_ffn":
         # pure MoE-FFN stack: layers grouped into cross-layer stream blocks —
@@ -323,7 +394,8 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
                 placement=ctx.placement, dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
                 data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk,
                 fsdp=ctx.fsdp_experts, interleave=ctx.moe_interleave,
-                traffic=tr, traffic_decay=ctx.traffic_decay)
+                traffic=tr, traffic_decay=ctx.traffic_decay,
+                traffic_mask=traffic_mask)
             if tr is not None:
                 h, tr = h
             return ctx.constrain(h), tr
@@ -380,7 +452,8 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
                               top_k=cfg.moe.top_k, data_axes=ctx.data_axes,
                               norm_topk=cfg.moe.norm_topk,
                               fsdp=ctx.fsdp_experts, traffic=tr,
-                              traffic_decay=ctx.traffic_decay)
+                              traffic_decay=ctx.traffic_decay,
+                              traffic_mask=traffic_mask)
                 if tr is not None:
                     y, tr = y
             elif use_tp:
@@ -476,7 +549,7 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, dtype,
                       ctx: ModelContext) -> DecodeState:
     L = cfg.n_layers
     kv = ssm = None
-    if cfg.family in ("dense", "moe", "vlm", "hybrid", "encdec"):
+    if cfg.family in ("dense", "moe", "moe_tx", "vlm", "hybrid", "encdec"):
         c = _kv_capacity(cfg, max_len)
         kv = {"k": jnp.zeros((L, batch, c, cfg.n_kv_heads, cfg.hd), dtype),
               "v": jnp.zeros((L, batch, c, cfg.n_kv_heads, cfg.hd), dtype)}
@@ -603,6 +676,23 @@ def decode_step(params, state: DecodeState, inputs, ctx: ModelContext,
                 y = jax.nn.silu(x @ lp["mlp"]["w_gate"]) * (x @ lp["mlp"]["w_up"])
                 y = y @ lp["mlp"]["w_down"]
             h = h + y
+        elif cfg.family == "moe_tx":
+            # parallel block: attention AND the MoE branch both read the
+            # block input h (what makes the attention tail-independent in
+            # the streamed prefill — decode must match that function)
+            x = rms_norm(h, lp["ln1"])
+            q, k, v = attn_lib.gqa_project(
+                x, lp["attn"]["wq"], lp["attn"]["wk"], lp["attn"]["wv"],
+                cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            cache = KVCache(kv_l["k"], kv_l["v"], pos, max_len)
+            cache = cache_update(cache, k, v)
+            a = decode_attention(q, cache)
+            new_kv = {"k": cache.k, "v": cache.v}
+            mix = a.reshape(b, 1, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+            y = _moe_decode_block(rms_norm(h, lp["ln2"]), lp["moe"], ctx)
+            h = h + mix + y
         elif cfg.family == "moe_ffn":
             x = rms_norm(h, lp["ln1"])
             h = h + _moe_decode_block(x, lp["moe"], ctx)
@@ -646,23 +736,53 @@ def decode_step(params, state: DecodeState, inputs, ctx: ModelContext,
 
 
 def prefill(params, inputs, positions, ctx: ModelContext, max_len: int,
-            traffic=None):
+            traffic=None, traffic_mask=None):
     """Run the full-sequence forward and materialise decode state.
 
     Implemented as forward_hidden + per-layer cache extraction for attention
     archs (recompute-free: k/v are emitted as scan ys).  ``traffic`` (moe
-    family): per-layer stacked traffic state threaded through the MoE
+    families): per-layer stacked traffic state threaded through the MoE
     islands; returns ``(logits, state, new_traffic)`` when given — this is
-    what lets the serving engine report per-wave expert-load stats."""
+    what lets the serving engine report per-wave expert-load stats.
+    ``traffic_mask``: (B, S) bool — True for real tokens; serving passes it
+    so left-pad slots and interleave pad rows don't count toward the EMA."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
-    if traffic is not None and cfg.family not in ("moe", "moe_ffn"):
+    if traffic is not None and cfg.family not in ("moe", "moe_ffn", "moe_tx"):
         raise ValueError(
-            f"traffic stats in prefill are supported for the moe/moe_ffn "
-            f"families only, got {cfg.family!r}")
+            f"traffic stats in prefill are supported for the "
+            f"moe/moe_ffn/moe_tx families only, got {cfg.family!r}")
+    if cfg.family == "moe_tx":
+        # stream blocks + cache extraction: the islands return their layers'
+        # RoPE'd full-sequence k/v stacks (identical on every EP lane)
+        if inputs.ndim == 2:
+            h = params["embed"].astype(cd)[inputs]
+        else:
+            h = inputs.astype(cd)
+        h = ctx.constrain(h)
+        s = h.shape[1]
+        h, new_traffic, kv = _tx_stack(params, h, positions, ctx,
+                                       traffic=traffic,
+                                       traffic_mask=traffic_mask,
+                                       return_kv=True)
+        logits = (h[:, -1] @ params["lm_head"].astype(cd)).astype(jnp.float32)
+        cap = _kv_capacity(cfg, max_len)
+        k, v = kv["k"], kv["v"]                 # (L, B, S, Hkv, hd)
+        if s >= cap:
+            ks_ = jnp.roll(k[:, :, -cap:], s % cap, axis=2)
+            vs_ = jnp.roll(v[:, :, -cap:], s % cap, axis=2)
+        else:
+            pad = ((0, 0), (0, 0), (0, cap - s), (0, 0), (0, 0))
+            ks_, vs_ = jnp.pad(k, pad), jnp.pad(v, pad)
+        state = DecodeState({"k": ks_, "v": vs_}, None,
+                            jnp.array(s, jnp.int32))
+        if traffic is not None:
+            return logits, state, new_traffic
+        return logits, state
     if cfg.family == "moe_ffn":
         # stateless stack: prefill is just the forward (stream blocks incl.)
-        h = forward_hidden(params, inputs, positions, ctx, traffic=traffic)
+        h = forward_hidden(params, inputs, positions, ctx, traffic=traffic,
+                           traffic_mask=traffic_mask)
         new_traffic = None
         if traffic is not None:
             h, new_traffic = h
@@ -763,7 +883,8 @@ def prefill(params, inputs, positions, ctx: ModelContext, max_len: int,
                 y = moe_block(x, lp["moe"], mesh=ctx.mesh, placement=ctx.placement,
                               dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
                               data_axes=ctx.data_axes, norm_topk=cfg.moe.norm_topk,
-                              traffic=tr, traffic_decay=ctx.traffic_decay)
+                              traffic=tr, traffic_decay=ctx.traffic_decay,
+                              traffic_mask=traffic_mask)
                 if tr is not None:
                     y, tr = y
             else:

@@ -44,11 +44,12 @@ def build(cfg: ArchConfig, ctx: ModelContext) -> ModelBundle:
         cfg, ctx,
         init=lambda key: lm.init_params(cfg, key, ctx),
         loss=lambda p, b, traffic=None: lm.lm_loss(p, b, ctx, traffic=traffic),
-        prefill=lambda p, b, max_len, traffic=None: lm.prefill(
-            p, b.get("embeds", b.get("tokens")),
-            b.get("positions", jnp.arange(
-                b.get("embeds", b.get("tokens")).shape[1])), ctx, max_len,
-            traffic=traffic),
+        prefill=lambda p, b, max_len, traffic=None, traffic_mask=None:
+            lm.prefill(
+                p, b.get("embeds", b.get("tokens")),
+                b.get("positions", jnp.arange(
+                    b.get("embeds", b.get("tokens")).shape[1])), ctx, max_len,
+                traffic=traffic, traffic_mask=traffic_mask),
         decode_step=lambda p, st, tok, max_len: lm.decode_step(
             p, st, tok, ctx, max_len))
 

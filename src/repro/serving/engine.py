@@ -24,11 +24,12 @@ batch up to a multiple of K × data-shards (pad rows carry pad tokens and are
 dropped from the results), so ragged waves still satisfy the stream's static
 lane split.
 
-Stats caveat: the traffic counters fold every routed position, including
-left-pad slots and interleave pad rows — a bounded distortion (< one lane
-multiple of all-pad rows per wave, plus each request's pad prefix) that is
-fine for the imbalance signal but should be masked out (ROADMAP) before
-serving-side EMA drives placement policy.
+Traffic validity: every wave builds a (B, S) pad mask (False on left-pad
+slots and on whole interleave pad rows) and threads it into
+``traffic.observe`` via the prefill — pad positions are still routed (static
+shapes) but contribute nothing to the EMA or the per-wave load snapshots, so
+serving-side stats can safely drive placement policy.  Pad-invariance is
+asserted in ``tests/test_serving.py``.
 """
 
 from __future__ import annotations
@@ -69,11 +70,12 @@ class ServingEngine:
         self.finished: list[Request] = []
         self.wave_loads: list[dict] = []
         self._next_id = 0
-        # moe_ffn interleaved stream: wave batches must split into K lanes
-        # PER DATA SHARD — the island sees batch / data_shards rows, so the
-        # wave pads to a multiple of interleave × data-shard count
+        # moe_ffn/moe_tx interleaved stream: wave batches must split into K
+        # lanes PER DATA SHARD — the island sees batch / data_shards rows, so
+        # the wave pads to a multiple of interleave × data-shard count
         self.interleave = (getattr(bundle.ctx, "moe_interleave", 1)
-                           if bundle.ctx.cfg.family == "moe_ffn" else 1)
+                           if bundle.ctx.cfg.family in ("moe_ffn", "moe_tx")
+                           else 1)
         self._wave_mult = 1
         if self.interleave > 1:
             dsz = 1
@@ -90,7 +92,8 @@ class ServingEngine:
                 ctx.cfg.moe.n_experts, ctx.placement.ep,
                 n_layers=ctx.cfg.n_layers)
             self._prefill = jax.jit(
-                lambda p, b, tr: bundle.prefill(p, b, max_len, traffic=tr))
+                lambda p, b, tr, mask: bundle.prefill(
+                    p, b, max_len, traffic=tr, traffic_mask=mask))
         else:
             self._prefill = jax.jit(lambda p, b: bundle.prefill(p, b, max_len))
         self._decode = jax.jit(
@@ -120,14 +123,17 @@ class ServingEngine:
         # pad rows are full pad-token rows, sliced off every result below
         bp = -(-b // self._wave_mult) * self._wave_mult
         toks = np.full((bp, s), self.pad_id, np.int32)
+        valid = np.zeros((bp, s), bool)      # False: left-pad slot / pad row
         for i, r in enumerate(wave):
             toks[i, s - len(r.prompt):] = r.prompt      # left-pad
+            valid[i, s - len(r.prompt):] = True
         batch = {"tokens": jnp.asarray(toks)}
 
         t0 = time.perf_counter()
         if self.traffic is not None:
             logits, state, self.traffic = self._prefill(params, batch,
-                                                        self.traffic)
+                                                        self.traffic,
+                                                        jnp.asarray(valid))
             self._record_wave_load()
         else:
             logits, state = self._prefill(params, batch)

@@ -72,9 +72,35 @@ def stream_spec(*, n_layers: int = 2, stream: bool = True,
     return spec
 
 
+def tx_stream_spec(*, n_layers: int = 2, stream: bool = True,
+                   interleave: int = 1, n_heads: int = 4, n_kv: int = 2,
+                   head_dim: int = 8, batch: int = 2, **kw) -> dict:
+    """A conformance spec for the ATTENTION-separated layer stream
+    (``fusco.tx_layer_stream``): ``n_layers`` parallel attention+MoE
+    transformer blocks chained through one fused schedule, checked against
+    the stacked attention+MoE dense oracle ``fusco.tx_dense_reference``.
+    The grid axes are the common ones; ``stream=False`` runs the per-layer-
+    barrier fallback of the same island, ``interleave=K`` round-robins K
+    batch-chunk micro-batch lanes through the schedule — the oracle is
+    unchanged for every variant (the stream is per-token order-preserving
+    and the attention branch reads the completed block input)."""
+    spec = conformance_spec(kw.pop("engine", "fused_pipe"), **kw)
+    spec["n_layers"] = n_layers
+    spec["stream"] = bool(stream)
+    spec["interleave"] = int(interleave)
+    spec["tx"] = {"n_heads": n_heads, "n_kv": n_kv, "head_dim": head_dim,
+                  "batch": batch}
+    return spec
+
+
 def driver_code(spec: dict) -> str:
     """Snippet for conftest.run_devices: runs the spec in the subprocess."""
-    fn = "run_stream_conformance" if "n_layers" in spec else "run_conformance"
+    if "tx" in spec:
+        fn = "run_tx_stream_conformance"
+    elif "n_layers" in spec:
+        fn = "run_stream_conformance"
+    else:
+        fn = "run_conformance"
     return ("import engine_harness\n"
             f"engine_harness.{fn}({json.dumps(spec)!r})\n")
 
@@ -247,3 +273,84 @@ def run_stream_conformance(spec) -> None:
                     ("stream", node_size, balancer, ekw, cap))
         n_cells += 1
     print(OK_TOKEN, "layer_stream", n_cells)
+
+
+def run_tx_stream_conformance(spec) -> None:
+    """Execute an attention-stream spec against the attention+MoE oracle.
+
+    Runs ``fusco.tx_layer_stream`` — ``n_layers`` parallel attention+MoE
+    transformer blocks inside ONE shard_map island whose sequence axis is
+    sharded over the EP axes (the island owns the k/v all-gather), streamed
+    through the fused schedule when ``spec["stream"]`` (the MoE tail combine
+    of layer l in flight across layer l's attention block) — and checks it
+    against ``fusco.tx_dense_reference``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import fusco
+    from repro.core.dcomm import DcommConfig
+    from repro.layers.moe import lane_major_expert_weights
+
+    spec, mesh, ep, ep_axis, ep_spec, arrs = _spec_env(spec)
+    x, wr, w1, w3, w2 = arrs
+    e, k = spec["n_experts"], spec["top_k"]
+    t, d, f = spec["t_per_lane"], spec["d"], spec["f"]
+    n_layers, stream = spec["n_layers"], spec["stream"]
+    interleave = spec.get("interleave", 1)
+    tx = spec["tx"]
+    nh, nkv, hd = tx["n_heads"], tx["n_kv"], tx["head_dim"]
+    b = tx["batch"]
+    s = ep * t // b                      # sequence sharded over the EP axes
+    dtype = x.dtype
+    xb = x.reshape(b, s, d)
+    positions = jnp.arange(s)
+    ks = jax.random.split(jax.random.PRNGKey(spec["seed"] + 1), 6)
+    attn = {
+        "wq": (jax.random.normal(ks[0], (n_layers, d, nh * hd)) * 0.1).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (n_layers, d, nkv * hd)) * 0.1).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (n_layers, d, nkv * hd)) * 0.1).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_layers, nh * hd, d)) * 0.1).astype(dtype),
+    }
+    ln1 = (1.0 + 0.1 * jax.random.normal(ks[4], (n_layers, d))).astype(dtype)
+    ln2 = (1.0 + 0.1 * jax.random.normal(ks[5], (n_layers, d))).astype(dtype)
+    ref = fusco.tx_dense_reference(
+        xb, positions, {"ln1": ln1, "ln2": ln2, **attn, "router": wr,
+                        "w1": w1, "w3": w3, "w2": w2},
+        k, n_heads=nh, n_kv=nkv, head_dim=hd)
+    ep_axes_entry = ep_spec[0]           # "model" or ("pod", "model")
+    x_spec = P(None, ep_axes_entry, None)
+
+    def run(cfg, placement, lane_params):
+        def fn(xl, pos, lp):
+            return fusco.tx_layer_stream(xl, pos, lp, placement, cfg, k,
+                                         n_heads=nh, n_kv=nkv, head_dim=hd,
+                                         stream=stream, interleave=interleave)
+        lp_spec = {k2: (P(None, ep_axes_entry, None, None)
+                        if k2 in ("w1", "w3", "w2")
+                        else P(*([None] * v.ndim)))
+                   for k2, v in lane_params.items()}
+        g = shard_map(fn, mesh=mesh,
+                      in_specs=(x_spec, P(None), lp_spec),
+                      out_specs=x_spec, check_vma=False)
+        return jax.jit(g)(xb, positions, lane_params)
+
+    n_cells = 0
+    for node_size, balancer, ekw, (cap, exact) in _grid_cells(spec):
+        placement = _make_placement(spec, ep, node_size)
+        lane_params = {"ln1": ln1, "ln2": ln2, **attn, "router": wr}
+        for name, w_all, last in (("w1", w1, (d, f)), ("w3", w3, (d, f)),
+                                  ("w2", w2, (f, d))):
+            lane_params[name] = jnp.stack(
+                [lane_major_expert_weights(w_all[l], placement)
+                 .reshape((-1,) + last) for l in range(n_layers)])
+        cfg = DcommConfig(engine=spec["engine"], ep_axis=ep_axis,
+                          node_size=node_size, capacity_factor=cap,
+                          use_balancer=balancer, **ekw)
+        y = run(cfg, placement, lane_params)
+        _check_cell(y, ref, spec, exact,
+                    ("tx_stream", node_size, balancer, ekw, cap))
+        n_cells += 1
+    print(OK_TOKEN, "tx_stream", n_cells)

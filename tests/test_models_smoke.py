@@ -82,6 +82,47 @@ def test_moe_ffn_stream_smoke(mesh):
                                      - results["perlayer"][1]))) < 5e-1, name
 
 
+def test_moe_tx_stream_smoke(mesh):
+    """The attention-separated MoE transformer (moe_tx): per-layer islands vs
+    2-layer attention-stream blocks vs the 2-way interleaved stream are the
+    same function up to engine rounding — identical params, compared
+    loss/prefill/decode outputs.  Decode exercises the prefill-extracted KV
+    caches, so cross-schedule decode agreement also pins the island's cache
+    extraction."""
+    cfg = get_arch("moe-tx-stream").reduced()
+    key = jax.random.PRNGKey(0)
+    batch = zoo.make_smoke_batch(cfg, key, batch=2, seq=16)
+    results = {}
+    for name, moe_stream, engine, interleave in [
+            ("perlayer", 0, "fused_flat", 1),
+            ("chained", 2, "fused_pipe", 1),
+            ("interleaved", 2, "fused_pipe", 2)]:
+        ctx = make_context(cfg, mesh, multi_pod=False, engine=engine,
+                           capacity_factor=4.0, node_size=1,
+                           moe_stream=moe_stream, moe_interleave=interleave)
+        bundle = zoo.build(cfg, ctx)
+        params = bundle.init(key)                # same key -> same params
+        with mesh:
+            loss, _ = jax.jit(bundle.loss)(params, batch)
+            assert jnp.isfinite(loss)
+            assert 2.0 < float(loss) < 12.0, float(loss)
+            logits, state = bundle.prefill(params, batch, 24)
+            assert logits.shape == (2, cfg.vocab)
+            assert bool(jnp.all(jnp.isfinite(logits)))
+            assert state.kv is not None          # attention arch: real caches
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            logits2, _ = bundle.decode_step(params, state, tok, 24)
+            assert logits2.shape == (2, cfg.vocab)
+            assert bool(jnp.all(jnp.isfinite(logits2)))
+            results[name] = (float(loss), logits, logits2)
+    for name in ("chained", "interleaved"):
+        assert abs(results[name][0] - results["perlayer"][0]) < 5e-2, name
+        for i in (1, 2):                         # prefill AND decode logits
+            assert float(jnp.max(jnp.abs(results[name][i]
+                                         - results["perlayer"][i]))) < 5e-1, \
+                (name, i)
+
+
 def test_moe_ffn_stream_rejects_indivisible_block(mesh):
     cfg = get_arch("moe-ffn-stream").reduced()       # 2 layers
     ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_pipe",

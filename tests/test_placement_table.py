@@ -125,15 +125,60 @@ def test_migration_round_trip_and_stats():
     pb = solve_placement(loads_b, ep=8, node_size=4, slots_per_lane=2)
     w = jax.random.normal(jax.random.PRNGKey(0), (8, 2, 3, 5))
     wb = migrate_lane_major(w, pa, pb)
-    # destination slot holds the old replica-0 block of its expert
-    idx = np.asarray(migration_gather_index(pa, pb)).reshape(8, 2)
+    # destination slot holds the REPLICA MEAN of its expert's old blocks
+    # (sourcing replica 0 — the migration_gather_index view — dropped the
+    # other replicas' training updates; see test_migration_replica_average)
     flat = np.asarray(w).reshape(16, 3, 5)
-    assert np.allclose(np.asarray(wb), flat[idx])
+    tbl_a = np.asarray(pa.lane_expert).reshape(-1)
+    canon = np.stack([flat[tbl_a == e].mean(axis=0) for e in range(12)])
+    assert np.allclose(np.asarray(wb),
+                       canon[np.asarray(pb.lane_expert).reshape(-1)]
+                       .reshape(8, 2, 3, 5), atol=1e-6)
+    # the replica-0 locality view still prices the move
+    idx = np.asarray(migration_gather_index(pa, pb)).reshape(8, 2)
+    assert idx.shape == (8, 2) and (idx >= 0).all()
     # migrating back under identical placement moves nothing
     st0 = migration_stats(pa, pa, row_bytes=10)
     assert st0["rows_moved"] < st0["slots"]  # replica-0 slots stay local
     stats = migration_stats(pa, pb, row_bytes=10)
     assert 0 < stats["bytes_moved"] == stats["rows_moved"] * 10
+
+
+def test_migration_replica_average():
+    """Regression (ROADMAP replica weight sync): replicated experts drift
+    apart during training (each replica gets an independent gradient share);
+    migration must carry their MEAN forward, not silently drop every replica
+    but replica 0.  When replicas agree the mean is a no-op."""
+    import jax.numpy as jnp
+    from repro.core.relayout import replica_mean_canonical
+    # 6 experts on 4 lanes x 2 slots = 8 slots -> hottest experts replicated
+    pa = solve_placement(1.0 / np.arange(1, 7), ep=4, node_size=2,
+                         slots_per_lane=2)
+    assert int(pa.n_replicas.max()) > 1
+    tbl = np.asarray(pa.lane_expert).reshape(-1)
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(6, 3))                 # canonical expert blocks
+    drift = rng.normal(size=(8, 3)) * 0.1          # per-replica divergence
+    w = jnp.asarray(base[tbl] + drift).reshape(4, 2, 3)
+    # same table, drifted replicas: every destination gets the replica mean
+    wb = np.asarray(migrate_lane_major(w, pa, pa)).reshape(8, 3)
+    flat = base[tbl] + drift
+    for i, e in enumerate(tbl):
+        want = flat[tbl == e].mean(axis=0)
+        assert np.allclose(wb[i], want, atol=1e-6), (i, e)
+    # regression: a drifted non-0 replica's update must survive (the old
+    # replica-0 gather made wb equal flat[home[e]] exactly)
+    rep_e = int(np.argmax(np.asarray(pa.n_replicas)))
+    slots = np.flatnonzero(tbl == rep_e)
+    assert not np.allclose(wb[slots[1]], flat[slots[0]])
+    # replicas in agreement -> identity
+    w_eq = jnp.asarray(base[tbl]).reshape(4, 2, 3)
+    assert np.allclose(np.asarray(migrate_lane_major(w_eq, pa, pa)),
+                       np.asarray(w_eq), atol=1e-6)
+    # canonical view matches a hand mean
+    canon = np.asarray(replica_mean_canonical(jnp.asarray(flat), pa))
+    for e in range(6):
+        assert np.allclose(canon[e], flat[tbl == e].mean(axis=0), atol=1e-6)
 
 
 def test_adaptive_beats_static_max_lane_load():

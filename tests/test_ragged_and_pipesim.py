@@ -13,9 +13,9 @@ from repro.core.dcomm import (build_ragged_descriptors,
                               ragged_reverse_descriptors)
 from repro.core.planner import build_flat_plan
 from repro.core.pipesim import (PipeParams, best_slice, plan_interleaved_stream,
-                                plan_layer_stream, plan_slices, simulate,
-                                simulate_interleaved_stream,
-                                simulate_layer_stream)
+                                plan_layer_stream, plan_slices, plan_tx_stream,
+                                simulate, simulate_interleaved_stream,
+                                simulate_layer_stream, simulate_tx_stream)
 from repro.core.routing import ExpertPlacement
 
 
@@ -318,6 +318,95 @@ def test_plan_interleaved_stream_feasible(payload_mb, n_layers, interleave):
                                      interleave,
                                      payload_bytes=payload_mb * 1e6,
                                      max_slices=3)
+    assert 1 <= capped["n_slices"] <= 3
+
+
+# ---- attention-separated stream model (moe_tx) ------------------------------
+
+def test_tx_stream_degenerates_to_pure_chain():
+    """With no attention and one lane the tx model IS the chained pure-MoE
+    schedule — bit-identical event timings, so every tx-vs-chained comparison
+    isolates exactly the attention window filler."""
+    p = PipeParams(payload_bytes=32e6, stage_bw=819e9, wire_bw=50e9)
+    for n in (1, 4, 8):
+        tx = simulate_tx_stream(p, n, 4, attn_s=0.0, interleave=1)
+        chained = simulate_interleaved_stream(p, n, 4, 1)
+        for key in ("total_s", "bubble_fraction", "boundary_bubble_fraction",
+                    "boundary_stall_s"):
+            assert abs(tx[key] - chained[key]) < 1e-15, (n, key)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 5), st.integers(0, 4),
+       st.integers(0, 40), st.integers(1, 2), st.integers(1, 40))
+def test_tx_bubble_never_exceeds_pure_chained(payload_mb, n_layers,
+                                              log_slices, attn_us, interleave,
+                                              overhead_us):
+    """The tentpole property: at EQUAL slice counts, the attention-filled
+    stream's bubble fractions never exceed the pure-MoE chained schedule's —
+    the attention block is tail-independent compute sitting between every
+    tail's combine-exchange issue and its consume, which is precisely the
+    window a pure MoE chain leaves empty."""
+    p = PipeParams(payload_bytes=payload_mb * 1e6,
+                   per_slice_overhead_s=overhead_us * 1e-6)
+    n = 1 << log_slices
+    chained = simulate_interleaved_stream(p, n, n_layers, 1)
+    tx = simulate_tx_stream(p, n, n_layers, attn_s=attn_us * 1e-6,
+                            interleave=interleave)
+    assert tx["bubble_fraction"] <= chained["bubble_fraction"] + 1e-9
+    assert (tx["boundary_bubble_fraction"]
+            <= chained["boundary_bubble_fraction"] + 1e-9)
+    assert -1e-12 <= tx["boundary_bubble_fraction"] \
+        <= tx["bubble_fraction"] + 1e-9
+    assert tx["bubble_fraction"] < 1.0
+    if attn_us > 0 or interleave > 1:
+        assert abs(tx["pure_chained_boundary_bubble_fraction"]
+                   - chained["boundary_bubble_fraction"]) < 1e-15
+
+
+def test_tx_fills_boundary_at_tpu_point():
+    """Acceptance: at the engine's default hardware point, attention equal to
+    one layer's staging time must STRICTLY shrink the boundary bubble vs the
+    pure-MoE chained schedule (the row bench_pipeline prints), at K=1 —
+    without needing micro-batch interleaving — and further at K=2."""
+    p = PipeParams(payload_bytes=32e6, stage_bw=819e9, wire_bw=50e9)
+    attn_s = p.payload_bytes / p.stage_bw          # attention ~ MoE staging
+    for n in (4, 8, 16):
+        chained = simulate_interleaved_stream(p, n, 4, 1)
+        tx = simulate_tx_stream(p, n, 4, attn_s=attn_s)
+        assert (tx["boundary_bubble_fraction"]
+                < chained["boundary_bubble_fraction"]), n
+        assert tx["bubble_fraction"] < chained["bubble_fraction"], n
+        tx2 = simulate_tx_stream(p, n, 4, attn_s=attn_s, interleave=2)
+        assert (tx2["boundary_bubble_fraction"]
+                <= tx["boundary_bubble_fraction"] + 1e-9), n
+    # more attention -> monotonically smaller boundary stall (same slices)
+    stalls = [simulate_tx_stream(p, 8, 4, attn_s=f * attn_s)["boundary_stall_s"]
+              for f in (0.0, 0.5, 1.0, 2.0)]
+    assert all(b <= a + 1e-12 for a, b in zip(stalls, stalls[1:]))
+    assert stalls[-1] < stalls[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 128), st.integers(1, 4), st.integers(1, 2),
+       st.integers(0, 30))
+def test_plan_tx_stream_feasible(payload_mb, n_layers, interleave, attn_us):
+    """plan_tx_stream slice-count sanity: >= 1, a makespan knee among the
+    power-of-two counts, and the max_slices cap is respected."""
+    attn_s = attn_us * 1e-6
+    plan = plan_tx_stream(PipeParams(payload_bytes=1.0), n_layers, interleave,
+                          attn_s, payload_bytes=payload_mb * 1e6)
+    assert plan["n_slices"] >= 1 and plan["interleave"] == interleave
+    assert plan["attn_s"] == attn_s
+    for n in (plan["n_slices"] // 2, plan["n_slices"] * 2):
+        if 1 <= n <= 1024:
+            other = simulate_tx_stream(
+                PipeParams(payload_bytes=payload_mb * 1e6), n, n_layers,
+                attn_s, interleave)
+            assert plan["total_s"] <= other["total_s"] + 1e-12
+    capped = plan_tx_stream(PipeParams(payload_bytes=1.0), n_layers,
+                            interleave, attn_s,
+                            payload_bytes=payload_mb * 1e6, max_slices=3)
     assert 1 <= capped["n_slices"] <= 3
 
 

@@ -92,3 +92,55 @@ def test_serving_prefill_waves_as_interleave_lanes():
     assert len(eng.wave_loads) == 2
     for w in eng.wave_loads:
         assert w["expert_tokens"].sum() > 0 and w["lane_imbalance"] >= 1.0
+    # validity mask: pad positions (left-pad slots + the all-pad 4th lane of
+    # the first wave) are routed but NOT counted — each wave's snapshot
+    # (summed over layers) is exactly (real tokens) x top_k x n_layers
+    real1 = sum(len(r.prompt) for r in done1)
+    real2 = sum(len(r.prompt) for r in done2)
+    for w, real in zip(eng.wave_loads, (real1, real2)):
+        assert int(w["expert_tokens"].sum()) \
+            == real * cfg.moe.top_k * cfg.n_layers
+
+
+def _one_wave_counts(cfg, ctx_kwargs, prompts, mesh):
+    import dataclasses
+    cfg = dataclasses.replace(cfg)
+    ctx = make_context(cfg, mesh, multi_pod=False, **ctx_kwargs)
+    bundle = zoo.build(cfg, ctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(bundle, max_batch=len(prompts), max_len=48,
+                        track_traffic=True)
+    for p in prompts:
+        eng.submit(p, max_new=2)
+    with mesh:
+        eng.run_wave(params)
+    return np.asarray(eng.traffic.last_expert_count)
+
+
+def test_serving_traffic_pad_invariance():
+    """Pad-invariance of the serving traffic stats: the same real prompts
+    observed through a padded wave (ragged lengths -> left-pad; interleave
+    K=2 -> an all-pad lane row) must produce EXACTLY the same expert counts
+    as an unpadded wave — pad routing no longer leaks into the EMA."""
+    import dataclasses
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dataclasses.replace(get_arch("moe-ffn-stream").reduced(), n_layers=2)
+    r = np.random.default_rng(0)
+    prompt = r.integers(0, cfg.vocab, (8,))
+    base = dict(engine="fused_pipe", capacity_factor=4.0, node_size=1,
+                moe_stream=2)
+    # one real request through K=1 (no pad rows, no left-pad)...
+    clean = _one_wave_counts(cfg, dict(base, moe_interleave=1), [prompt], mesh)
+    # ...vs the same request through K=2 (wave padded with an all-pad row)
+    padded = _one_wave_counts(cfg, dict(base, moe_interleave=2), [prompt],
+                              mesh)
+    assert clean.sum() > 0
+    np.testing.assert_array_equal(clean, padded)
+    # and vs a ragged wave (second, shorter request brings left-pad): the
+    # combined counts are the sum of each prompt's own counts — no pad terms
+    short = r.integers(0, cfg.vocab, (5,))
+    short_only = _one_wave_counts(cfg, dict(base, moe_interleave=1), [short],
+                                  mesh)
+    ragged = _one_wave_counts(cfg, dict(base, moe_interleave=2),
+                              [prompt, short], mesh)
+    np.testing.assert_array_equal(ragged, clean + short_only)
