@@ -1,0 +1,109 @@
+"""Offered-load serving sweep — continuous vs. waved admission.
+
+Poisson arrivals crossed with a mixed prompt-length distribution drive both
+engines over the same reduced-MoE bundle on the 8-device host mesh.  The
+waved engine admits lock-step (one straggler holds every slot; a request
+arriving mid-wave queues until the wave drains), the continuous engine
+prefill-inserts into free slots between decode steps.  Reported per
+(engine × load): p50/p99 TTFT (queueing included — ``submitted_at`` is the
+arrival time), decode tok/s, mean slot occupancy, plus steady-state
+recompile counts (the continuous engine must report 0 after warmup).
+Absolute times are CPU-relative; the p99 ratio is the structural result.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_sub
+
+CODE = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.configs import get_arch
+from repro.models import zoo
+from repro.models.lm import make_context
+from repro.serving.engine import ContinuousServingEngine, ServingEngine
+
+GEN = 8
+MAX_BATCH = 8
+N_REQ = 24
+BUCKETS = tuple(sorted({max(16, SEQ // 4), max(16, SEQ // 2), SEQ}))
+MAX_LEN = SEQ + GEN
+
+mesh = make_mesh((2, 4), ("data", "model"))
+cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_hier",
+                   capacity_factor=2.0, node_size=2)
+bundle = zoo.build(cfg, ctx)
+params = bundle.init(jax.random.PRNGKey(0))
+
+def workload(mean_interarrival, seed=0):
+    '''Poisson arrivals x prompt-length mix over the bucket set.'''
+    r = np.random.default_rng(seed)
+    arrivals = np.cumsum(r.exponential(mean_interarrival, N_REQ))
+    lens = r.choice(BUCKETS, N_REQ, p=[0.5, 0.3, 0.2][:len(BUCKETS)]
+                    if len(BUCKETS) == 3 else None)
+    prompts = [r.integers(0, cfg.vocab, (int(n),)) for n in lens]
+    return arrivals, prompts
+
+def drive(eng, arrivals, prompts, waved):
+    warm_s = eng.warmup(params)
+    n_warm = eng.compile_count
+    t_start = time.perf_counter()
+    i = 0
+    while True:
+        now = time.perf_counter() - t_start
+        while i < len(arrivals) and arrivals[i] <= now:
+            eng.submit(prompts[i], max_new=GEN)
+            i += 1
+        work = bool(eng.queue) if waved else eng.pending()
+        if work:
+            eng.run_wave(params) if waved else eng.step(params)
+        elif i < len(arrivals):
+            time.sleep(min(arrivals[i] - now, 0.005))
+        else:
+            break
+    st = eng.stats()
+    st["makespan_s"] = time.perf_counter() - t_start
+    st["warmup_s"] = warm_s
+    st["steady_recompiles"] = eng.compile_count - n_warm
+    return st
+
+out = {}
+for load, mean_ia in [("light", 0.08), ("heavy", 0.01)]:
+    with mesh:
+        arrivals, prompts = workload(mean_ia, seed=hash(load) % 1000)
+        cont = drive(ContinuousServingEngine(
+            bundle, max_batch=MAX_BATCH, max_len=MAX_LEN, buckets=BUCKETS),
+            arrivals, prompts, waved=False)
+        wav = drive(ServingEngine(
+            bundle, max_batch=MAX_BATCH, max_len=MAX_LEN, buckets=BUCKETS),
+            arrivals, prompts, waved=True)
+    out[load] = {"continuous": cont, "waved": wav}
+print(json.dumps(out))
+"""
+
+
+def run(t: int | None = None) -> list[tuple[str, float, str]]:
+    """``t``: largest prompt bucket (the --sizes smoke knob); None = 64."""
+    res = run_sub(f"SEQ = {int(t) if t else 64}\n" + CODE, n_devices=8,
+                  timeout=2400)
+    rows = []
+    for load, r in res.items():
+        for eng in ("continuous", "waved"):
+            st = r[eng]
+            for k in ("p50_ttft_s", "p99_ttft_s"):
+                rows.append((f"serving/{load}/{eng}/{k[:-2]}", st[k] * 1e6, ""))
+            rows.append((f"serving/{load}/{eng}/steady_recompiles",
+                         st["steady_recompiles"], "n"))
+            if "decode_tok_s" in st:
+                rows.append((f"serving/{load}/{eng}/decode_tok_s",
+                             st["decode_tok_s"], "tok/s"))
+            if "mean_slot_occupancy" in st:
+                rows.append((f"serving/{load}/{eng}/occupancy",
+                             st["mean_slot_occupancy"], "frac"))
+        rows.append((f"serving/{load}/p99_ttft_waved_over_continuous",
+                     r["waved"]["p99_ttft_s"] / r["continuous"]["p99_ttft_s"],
+                     "x"))
+    return rows

@@ -14,23 +14,25 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: traffic,ablation,breakdown,e2e")
+                    help="comma-separated subset: "
+                         "traffic,ablation,breakdown,e2e,pipeline,serving")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated token counts per lane for the "
                          "suites that take sizes (traffic, ablation, "
-                         "pipeline, e2e) — e.g. --sizes 64 for the CI smoke "
-                         "run")
+                         "pipeline, e2e, serving) — e.g. --sizes 64 for the "
+                         "CI smoke run")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes else None)
 
     from benchmarks import (bench_ablation, bench_breakdown, bench_e2e,
-                            bench_pipeline, bench_traffic)
+                            bench_pipeline, bench_serving, bench_traffic)
     suites = {
         "breakdown": bench_breakdown,   # Table 1
         "traffic": bench_traffic,       # Figs 7/8/9
         "ablation": bench_ablation,     # Table 3
         "e2e": bench_e2e,               # Fig 11
         "pipeline": bench_pipeline,     # Fig 5 (slice pipelining model)
+        "serving": bench_serving,       # TTFT under load: continuous vs waved
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -42,7 +44,8 @@ def main() -> None:
         try:
             if sizes is not None and name == "traffic":
                 rows = mod.run(sizes=tuple(sizes))
-            elif sizes is not None and name in ("ablation", "pipeline", "e2e"):
+            elif sizes is not None and name in ("ablation", "pipeline", "e2e",
+                                                "serving"):
                 rows = mod.run(t=sizes[-1])
             else:
                 rows = mod.run()

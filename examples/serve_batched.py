@@ -1,5 +1,6 @@
 """Batched serving example: prefill (FUSCO engine in the dispatch path) +
-greedy decode for a batch of requests, reporting TTFT and per-token latency.
+greedy decode, reporting TTFT (compile time separated) and decode latency —
+once through the continuous per-slot engine, once as one lock-step batch.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -11,9 +12,13 @@ from repro.launch import serve
 
 
 def main():
-    serve.main(["--arch", "qwen3-moe-30b-a3b", "--reduced",
-                "--engine", "fused_hier", "--requests", "16",
-                "--prompt-len", "64", "--gen", "16"])
+    base = ["--arch", "qwen3-moe-30b-a3b", "--reduced",
+            "--engine", "fused_hier", "--requests", "16",
+            "--prompt-len", "64", "--gen", "16"]
+    print("== continuous (per-slot admission) ==")
+    serve.main(base + ["--continuous"])
+    print("== waved (one lock-step batch) ==")
+    serve.main(base)
 
 
 if __name__ == "__main__":

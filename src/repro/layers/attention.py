@@ -286,7 +286,9 @@ def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 class KVCache(NamedTuple):
     k: jax.Array          # (B, C, Hkv, hd) — C = min(max_len, window)
     v: jax.Array
-    length: jax.Array     # () int32 — tokens seen so far
+    length: jax.Array     # () int32 — tokens seen so far — or (B,) int32 for
+                          # per-row lengths (continuous-batching decode: each
+                          # batch slot is at its own position)
     max_len: int          # logical max positions (static)
 
     @property
@@ -303,11 +305,19 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
 
 
 def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
-    """Append one step (B, 1, Hkv, hd); ring-buffer write when windowed."""
+    """Append one step (B, 1, Hkv, hd); ring-buffer write when windowed.
+    With per-row lengths ((B,) — continuous batching) each row writes at its
+    own slot."""
     c = cache.k.shape[1]
-    pos = cache.length % c
-    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, pos, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, pos, 0, 0))
+    if cache.length.ndim == 0:
+        pos = cache.length % c
+        k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, pos, 0, 0))
+    else:
+        rows = jnp.arange(cache.k.shape[0])
+        slot = cache.length % c
+        k = cache.k.at[rows, slot].set(k_new[:, 0])
+        v = cache.v.at[rows, slot].set(v_new[:, 0])
     return KVCache(k, v, cache.length + 1, cache.max_len)
 
 
@@ -323,15 +333,21 @@ def decode_attention(q: jax.Array, cache: KVCache,
     scale = hd ** -0.5
     qr = q.reshape(b, hkv, g, hd)
     s = jnp.einsum("bhgd,bkhd->bhgk", qr, cache.k).astype(jnp.float32) * scale
-    # valid slots: ring buffer holds the last min(length, C) positions
+    # valid slots: ring buffer holds the last min(length, C) positions; with
+    # per-row lengths each row masks against its own fill level (rows at
+    # length 0 — free continuous-batching slots — see a uniform softmax over
+    # all-masked scores: finite garbage, dropped by the engine)
+    length = cache.length
+    if length.ndim == 0:
+        length = jnp.broadcast_to(length, (b,))
     slot = jnp.arange(c)
-    n_valid = jnp.minimum(cache.length, c)
-    wrap = cache.length % c
-    age = (wrap - 1 - slot) % c      # 0 = newest
+    n_valid = jnp.minimum(length, c)[:, None]
+    wrap = (length % c)[:, None]
+    age = (wrap - 1 - slot[None, :]) % c      # (B, C), 0 = newest
     valid = age < n_valid
     if window_len is not None:
         valid &= age < window_len
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v)
     return out.reshape(b, 1, hq, hd)

@@ -27,11 +27,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from repro.compat import shard_map
+from repro.compat import axis_size, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dcomm import DcommConfig, _lane_index
-from repro.core.routing import ExpertPlacement, router_logits, top_k_routing
+from repro.core.routing import (ExpertPlacement, balanced_replica_choice,
+                                router_logits, top_k_routing)
 from repro.core import balancer as balancer_lib
 from repro.core import fusco
 from repro.core import traffic as traffic_lib
@@ -313,6 +314,79 @@ def stream_tx_layers(x: jax.Array, moe_params, attn_params, ln1: jax.Array,
     if return_kv:
         out += (kv,)
     return out[0] if len(out) == 1 else out
+
+
+def moe_decode_block(x: jax.Array, moe_p, *, mesh, placement: ExpertPlacement,
+                     dcfg: DcommConfig, top_k: int, data_axes=("data",),
+                     norm_topk: bool = True, fsdp: bool = False):
+    """Decode-side MoE: replicated-token EP for single-step decode — every
+    lane routes all tokens, computes only its experts' shares, psum over the
+    EP axes (a one-token-per-lane all-to-all is degenerate; the FUSCO
+    engines live in the prefill path).
+
+    This is the island the continuous-batching serving engine steps once per
+    emitted token for the whole slot pool: rows are position-independent here
+    (routing reads only the hidden state), so per-slot decode positions need
+    no changes on the MoE side — the per-row state lives in the attention
+    cache (``layers/attention.KVCache`` with ``(B,)`` lengths).
+
+    Replica choice: decode used to pin replica 0, so a replicated hot
+    expert's whole decode load landed on one lane.  It reuses
+    ``balanced_replica_choice`` — the same deterministic round-robin on the
+    running per-expert count that prefill/training shuffle under (and the
+    sender-local analogue of picking the least-EMA-loaded replica, the
+    signal the serving engine's ``TrafficState`` tracks) — so decode traffic
+    spreads across all lanes hosting a replica.  The choice is replicated
+    across lanes (same A everywhere), so exactly one lane still computes
+    each (token, k) share and the psum is unchanged.
+    """
+    ep_axes = (dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list))
+               else (dcfg.ep_axis,))
+    # decode batches may be smaller than the data axis (long-context b=1)
+    dsz = 1
+    for ax in data_axes:
+        dsz *= dict(mesh.shape)[ax]
+    dp = data_axes if x.shape[0] % dsz == 0 and x.shape[0] >= dsz else ()
+
+    def inner(xl, wr, w1, w3, w2):
+        if fsdp:
+            # local layout (EP_loc=1, E_local, d, f_shard)
+            w1 = jax.lax.all_gather(w1, "data", axis=3, tiled=True)
+            w3 = jax.lax.all_gather(w3, "data", axis=3, tiled=True)
+            w2 = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
+        b, s, d = xl.shape
+        xt = xl.reshape(b * s, d)
+        logits = router_logits(xt, wr)
+        A, gates = top_k_routing(logits, top_k, norm_topk)
+        replica = balanced_replica_choice(A, placement)
+        lane = placement.lane_of_expert(A, replica)
+        eloc = placement.local_expert_index(A, replica)
+        my = jax.lax.axis_index(ep_axes[-1])
+        if len(ep_axes) == 2:
+            my = my + jax.lax.axis_index(ep_axes[0]) * (
+                placement.ep // axis_size(ep_axes[0]))
+        # masked dense compute over this lane's experts
+        h1 = jnp.einsum("td,edf->tef", xt, w1[0])
+        h3 = jnp.einsum("td,edf->tef", xt, w3[0])
+        act = jax.nn.silu(h1) * h3
+        out_e = jnp.einsum("tef,efd->ted", act, w2[0])   # (T, E_local, d)
+        mask = (lane == my)[..., None] & (
+            eloc[..., None] == jnp.arange(placement.experts_per_lane))
+        w = (mask * gates[..., None]).sum(axis=1).astype(out_e.dtype)  # (T, E_local)
+        y = jnp.einsum("ted,te->td", out_e, w)
+        y = jax.lax.psum(y, ep_axes)
+        return y.reshape(b, s, d)
+
+    x_spec = P(dp or None, None, None)
+    if fsdp:
+        w_spec = P(ep_axes, None, None, "data")
+        w2_spec = P(ep_axes, None, "data", None)
+    else:
+        w_spec = w2_spec = P(ep_axes, None, None, None)
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(x_spec, P(None, None), w_spec, w_spec, w2_spec),
+                   out_specs=x_spec, check_vma=False)
+    return fn(x, moe_p["router"], moe_p["w1"], moe_p["w3"], moe_p["w2"])
 
 
 def lane_major_expert_weights(w_all: jax.Array, placement: ExpertPlacement) -> jax.Array:

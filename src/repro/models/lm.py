@@ -18,18 +18,17 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from repro.compat import axis_size, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.dcomm import DcommConfig
-from repro.core.routing import (ExpertPlacement, balanced_replica_choice,
-                                router_logits, top_k_routing)
+from repro.core.routing import ExpertPlacement
 from repro.layers import attention as attn_lib
 from repro.layers.attention import KVCache, attention_block, cache_update, decode_attention
 from repro.layers.common import dense_init, embed_init, rms_norm, apply_rope, apply_mrope
 from repro.layers.hybrid import hymba_mixer
-from repro.layers.moe import moe_block, stream_moe_layers, stream_tx_layers
+from repro.layers.moe import (moe_block, moe_decode_block, stream_moe_layers,
+                              stream_tx_layers)
 from repro.layers.ssm import SsmState, mamba2_mixer
 
 
@@ -534,7 +533,9 @@ def lm_loss(params, batch, ctx: ModelContext, traffic=None):
 class DecodeState(NamedTuple):
     kv: Any            # stacked (L, ...) KVCache arrays or None
     ssm: Any           # stacked SsmState arrays or None
-    length: jax.Array  # () int32
+    length: jax.Array  # () int32 — or (B,) int32 per-row positions when the
+                       # state is a continuous-batching slot pool (each slot
+                       # decodes at its own position; free slots sit at 0)
 
 
 def _kv_capacity(cfg: ArchConfig, max_len: int) -> int:
@@ -546,7 +547,10 @@ def _kv_capacity(cfg: ArchConfig, max_len: int) -> int:
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, dtype,
-                      ctx: ModelContext) -> DecodeState:
+                      ctx: ModelContext, per_slot: bool = False) -> DecodeState:
+    """Zeroed decode state; ``per_slot=True`` makes ``length`` per-row
+    ((batch,) int32) — the continuous-batching slot pool, where each row is
+    an independent request at its own position."""
     L = cfg.n_layers
     kv = ssm = None
     if cfg.family in ("dense", "moe", "moe_tx", "vlm", "hybrid", "encdec"):
@@ -560,77 +564,30 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, dtype,
         conv_dim = din + 2 * s.n_groups * s.d_state
         ssm = {"state": jnp.zeros((L, batch, h, s.head_dim, s.d_state), dtype),
                "conv": jnp.zeros((L, batch, s.conv_kernel - 1, conv_dim), dtype)}
-    return DecodeState(kv, ssm, jnp.zeros((), jnp.int32))
+    return DecodeState(kv, ssm,
+                       jnp.zeros((batch,) if per_slot else (), jnp.int32))
 
 
 def _moe_decode_block(x, moe_p, ctx: ModelContext):
-    """Replicated-token EP for single-step decode: every lane routes all
-    tokens, computes only its experts' shares, psum over EP axes.
-
-    Replica choice: decode used to pin replica 0, so a replicated hot
-    expert's whole decode load landed on one lane.  It now reuses
-    ``balanced_replica_choice`` — the same deterministic round-robin on the
-    running per-expert count that prefill/training shuffle under (and the
-    sender-local analogue of picking the least-EMA-loaded replica, the
-    signal the serving engine's ``TrafficState`` tracks) — so decode traffic
-    spreads across all lanes hosting a replica.  The choice is replicated
-    across lanes (same A everywhere), so exactly one lane still computes
-    each (token, k) share and the psum is unchanged.
-    """
+    """Decode-side MoE island — see ``layers/moe.moe_decode_block``."""
     cfg = ctx.cfg
-    placement, dcfg = ctx.placement, ctx.dcfg
-    ep_axes = dcfg.ep_axis if isinstance(dcfg.ep_axis, (tuple, list)) else (dcfg.ep_axis,)
-    # decode batches may be smaller than the data axis (long-context b=1)
-    dsz = 1
-    for ax in ctx.data_axes:
-        dsz *= dict(ctx.mesh.shape)[ax]
-    dp = ctx.data_axes if x.shape[0] % dsz == 0 and x.shape[0] >= dsz else ()
-
-    def inner(xl, wr, w1, w3, w2):
-        if ctx.fsdp_experts:
-            # local layout (EP_loc=1, E_local, d, f_shard)
-            w1 = jax.lax.all_gather(w1, "data", axis=3, tiled=True)
-            w3 = jax.lax.all_gather(w3, "data", axis=3, tiled=True)
-            w2 = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
-        b, s, d = xl.shape
-        xt = xl.reshape(b * s, d)
-        logits = router_logits(xt, wr)
-        A, gates = top_k_routing(logits, cfg.moe.top_k, cfg.moe.norm_topk)
-        replica = balanced_replica_choice(A, placement)
-        lane = placement.lane_of_expert(A, replica)
-        eloc = placement.local_expert_index(A, replica)
-        my = jax.lax.axis_index(ep_axes[-1])
-        if len(ep_axes) == 2:
-            my = my + jax.lax.axis_index(ep_axes[0]) * (
-                placement.ep // axis_size(ep_axes[0]))
-        # masked dense compute over this lane's experts
-        h1 = jnp.einsum("td,edf->tef", xt, w1[0])
-        h3 = jnp.einsum("td,edf->tef", xt, w3[0])
-        act = jax.nn.silu(h1) * h3
-        out_e = jnp.einsum("tef,efd->ted", act, w2[0])   # (T, E_local, d)
-        mask = (lane == my)[..., None] & (
-            eloc[..., None] == jnp.arange(placement.experts_per_lane))
-        w = (mask * gates[..., None]).sum(axis=1).astype(out_e.dtype)  # (T, E_local)
-        y = jnp.einsum("ted,te->td", out_e, w)
-        y = jax.lax.psum(y, ep_axes)
-        return y.reshape(b, s, d)
-
-    x_spec = P(dp or None, None, None)
-    if ctx.fsdp_experts:
-        w_spec = P(ep_axes, None, None, "data")
-        w2_spec = P(ep_axes, None, "data", None)
-    else:
-        w_spec = w2_spec = P(ep_axes, None, None, None)
-    fn = shard_map(inner, mesh=ctx.mesh,
-                   in_specs=(x_spec, P(None, None), w_spec, w_spec, w2_spec),
-                   out_specs=x_spec, check_vma=False)
-    return fn(x, moe_p["router"], moe_p["w1"], moe_p["w3"], moe_p["w2"])
+    return moe_decode_block(x, moe_p, mesh=ctx.mesh, placement=ctx.placement,
+                            dcfg=ctx.dcfg, top_k=cfg.moe.top_k,
+                            data_axes=ctx.data_axes,
+                            norm_topk=cfg.moe.norm_topk,
+                            fsdp=ctx.fsdp_experts)
 
 
 def decode_step(params, state: DecodeState, inputs, ctx: ModelContext,
                 max_len: int):
     """One-token decode.  inputs: (B,) int32 tokens or (B, 1, d) embeddings.
-    Returns (logits (B, V), new DecodeState)."""
+    Returns (logits (B, V), new DecodeState).
+
+    ``state.length`` may be a scalar (classic lock-step batch: every row at
+    the same position) or (B,) per-row positions (continuous-batching slot
+    pool: each row RoPE-rotates, cache-writes and masks at its own position
+    — what lets a freshly prefilled request decode next to slots mid-way
+    through theirs)."""
     cfg = ctx.cfg
     cd = ctx.compute_dtype
     if inputs.ndim == 1:
@@ -639,9 +596,13 @@ def decode_step(params, state: DecodeState, inputs, ctx: ModelContext,
         h = inputs.astype(cd)
     b = h.shape[0]
     pos = state.length
-    positions = pos[None].astype(jnp.int32)              # (1,)
+    if pos.ndim == 1:
+        positions = pos[:, None].astype(jnp.int32)       # (B, 1) per-row
+    else:
+        positions = pos[None].astype(jnp.int32)          # (1,)
     if cfg.mrope_sections:
-        positions = jnp.broadcast_to(positions, (3, 1))
+        positions = jnp.broadcast_to(positions[None],
+                                     (3,) + positions.shape)
     ssm_args = _ssm_args(cfg) if cfg.ssm else None
     flags = _is_global_flags(cfg)
 

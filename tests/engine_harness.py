@@ -177,6 +177,30 @@ def _check_cell(y, ref, spec, exact, key):
         assert bool(jnp.all(jnp.isfinite(y))), key
 
 
+def serving_stream_oracle(bundle, params, mesh, prompts, *, max_new: int,
+                          buckets, max_len: int, eos_id: int | None = None):
+    """Batch-1 greedy reference token streams for serving conformance.
+
+    Each prompt runs alone through the waved engine (``max_batch=1``, same
+    bucket set) — no cross-request batching, no slot pool — so the returned
+    streams are the per-request ground truth that any admission discipline
+    (per-slot continuous included) must reproduce exactly under greedy
+    argmax.  Prompts should sit exactly on bucket boundaries: left-pad slots
+    are attended by design, so off-bucket lengths pad differently between
+    disciplines and parity is not defined for them."""
+    from repro.serving.engine import ServingEngine
+
+    streams = []
+    for p in prompts:
+        eng = ServingEngine(bundle, max_batch=1, max_len=max_len,
+                            eos_id=eos_id, buckets=tuple(buckets))
+        eng.submit(p, max_new=max_new)
+        with mesh:
+            done = eng.run_wave(params)
+        streams.append(list(done[0].output))
+    return streams
+
+
 def run_conformance(spec) -> None:
     """Execute a conformance spec against the dense oracle (subprocess side)."""
     import jax

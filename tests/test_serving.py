@@ -102,6 +102,68 @@ def test_serving_prefill_waves_as_interleave_lanes():
             == real * cfg.moe.top_k * cfg.n_layers
 
 
+def test_serving_moe_tx_traffic_tracked():
+    """Regression: track_traffic=True must accept the moe_tx family (PR 5
+    wired traffic through its stream prefill, but the engine's allow-list
+    still said moe/moe_ffn only)."""
+    import dataclasses
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dataclasses.replace(get_arch("moe-tx-stream").reduced(), n_layers=2)
+    ctx = make_context(cfg, mesh, multi_pod=False, engine="fused_pipe",
+                       capacity_factor=4.0, node_size=1, moe_stream=2)
+    bundle = zoo.build(cfg, ctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(bundle, max_batch=3, max_len=48, track_traffic=True)
+    r = np.random.default_rng(0)
+    for i in range(5):
+        eng.submit(r.integers(0, cfg.vocab, (8 + i,)), max_new=3)
+    with mesh:
+        done1 = eng.run_wave(params)
+        done2 = eng.run_wave(params)
+    assert len(done1) == 3 and len(done2) == 2
+    # one traffic observation per wave, per stream-layer slice
+    assert eng.traffic.steps.tolist() == [2] * cfg.n_layers
+    assert len(eng.wave_loads) == 2
+    for w in eng.wave_loads:
+        assert w["expert_tokens"].sum() > 0 and w["lane_imbalance"] >= 1.0
+    # validity mask holds for the attention-separated stream too
+    for w, wave in zip(eng.wave_loads, (done1, done2)):
+        real = sum(len(r.prompt) for r in wave)
+        assert int(w["expert_tokens"].sum()) \
+            == real * cfg.moe.top_k * cfg.n_layers
+
+
+def test_serving_eos_mid_decode_waved():
+    """eos_id early termination in the waved engine: rerunning the same
+    deterministic greedy workload with eos_id set to an emitted token must
+    truncate every stream at its first eos occurrence (inclusive) while the
+    wave's other members decode on."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("qwen3-1.7b").reduced()
+    ctx = make_context(cfg, mesh, multi_pod=False)
+    bundle = zoo.build(cfg, ctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+    r = np.random.default_rng(0)
+    prompts = [r.integers(0, cfg.vocab, (8 + i,)) for i in range(3)]
+
+    def run(eos_id):
+        eng = ServingEngine(bundle, max_batch=3, max_len=48, eos_id=eos_id)
+        for p in prompts:
+            eng.submit(p, max_new=6)
+        with mesh:
+            eng.run_wave(params)
+        return {q.rid: q.output for q in eng.finished}
+
+    base = run(eos_id=None)
+    # an eos that hits one request mid-stream (not its first token)
+    eos = base[0][2]
+    cut = run(eos_id=eos)
+    assert len(cut[0]) < len(base[0]) and cut[0][-1] == eos
+    for rid, full in base.items():
+        idx = full.index(eos) if eos in full else len(full) - 1
+        assert cut[rid] == full[:idx + 1]
+
+
 def _one_wave_counts(cfg, ctx_kwargs, prompts, mesh):
     import dataclasses
     cfg = dataclasses.replace(cfg)
