@@ -12,6 +12,18 @@ structural win — CPU wall times serialize lanes, so the structural metric is
 what transfers to the TPU target), the engine latency under both placements,
 and the weight bytes a relayout would migrate (the cost the replan cadence
 amortizes — DESIGN.md §traffic).
+
+Comm-path planning rows (``core/commplan.py``, DESIGN.md §commplan):
+
+  * dedup — cross-node wire rows of the dense flat plan vs the condensed
+    plan under duplicate-heavy routing, plus the condensed engine's latency;
+    the structural acceptance metric is ``cross_rows_dedup <
+    cross_rows_dense`` wherever tokens fan out within a lane.
+  * crossover — modeled flat vs hier cost (plan_paths) on the measured EMA
+    as the wire slows down: the policy must pick flat on a fast wire and
+    flip to hier once the slow tier dominates.
+  * seqmig — LPT sequence migration on zipf per-sequence loads: max-rank
+    load before/after and the rows it moves to get there.
 """
 
 from __future__ import annotations
@@ -62,6 +74,50 @@ fa = jax.jit(engine_fn("fused_flat", T, with_ffn=True, place=adaptive))
 row["static_t"] = timeit(fs, x, A, g, w1, w3, w2)
 row["adaptive_t"] = timeit(fa, x, A, g, w1a, w3a, w2a)
 results["imbalanced/adaptive"] = row
+
+# --- comm-path planning: dedup / crossover / sequence migration ------------
+from repro.core import commplan
+
+T = SIZES[-1]
+for pattern in ["real_world", "single_node", "imbalanced"]:
+    x, A, g, w1, w3, w2 = inputs(pattern, T)
+    src_lane = np.arange(EP * T) // T
+    lane = np.asarray(placement.lane_of_expert(A))
+    node = lane // NODE
+    src_node = src_lane // NODE
+    # dense flat wire: one row per (token, k) assignment; condensed: one per
+    # distinct (token, dest lane).  Cross-node = rows leaving the source node.
+    dense_cross = int((node != src_node[:, None]).sum())
+    cond_cross = 0
+    for t in range(EP * T):
+        ls = np.unique(lane[t])
+        cond_cross += int(((ls // NODE) != src_node[t]).sum())
+    row = {"dense_cross": dense_cross, "cond_cross": cond_cross}
+    fd = jax.jit(engine_fn("fused_flat", T))
+    fc = jax.jit(engine_fn("fused_flat", T, dedup=True))
+    row["dense_t"] = timeit(fd, x, A, g, w1, w3, w2)
+    row["dedup_t"] = timeit(fc, x, A, g, w1, w3, w2)
+    # flat-vs-hier crossover: same measured EMA, sweep the wire bandwidth
+    st = traffic_lib.init_traffic_state(E, EP)
+    st = traffic_lib.observe(st, A, placement, jnp.asarray(src_lane),
+                             decay=0.5)
+    for tag, bw in [("fast_wire", 400e9), ("slow_wire", 2e9)]:
+        (d,) = commplan.plan_paths(st, placement, row_bytes=D * 4,
+                                   costs=commplan.LinkCosts(inter_bw=bw))
+        row[tag] = d.engine
+        row[tag + "_ratio"] = d.flat_s / d.hier_s
+    results[f"commplan/{pattern}"] = row
+
+# sequence migration: zipf per-sequence loads over 8 data ranks
+rng = np.random.default_rng(0)
+B = max(8, (SIZES[-1] // 8) * 8)
+for tag, loads in [("zipf", rng.zipf(1.3, size=B).astype(np.float64)),
+                   ("uniform", np.ones(B))]:
+    perm, stats = commplan.plan_sequence_migration(loads, 8, row_bytes=D * 4)
+    results[f"seqmig/{tag}"] = {
+        "before": stats["max_load_before"], "after": stats["max_load_after"],
+        "rows_moved": stats["rows_moved"],
+        "bytes_moved": stats["bytes_moved"]}
 print(json.dumps(results))
 """
 
@@ -70,6 +126,8 @@ def run(sizes=(256, 1024)) -> list[tuple[str, float, str]]:
     res = run_sub(CODE.replace("__SIZES__", repr(list(sizes))), timeout=1800)
     rows = []
     adaptive = res.pop("imbalanced/adaptive")
+    commplan_rows = {k: res.pop(k) for k in list(res)
+                     if k.startswith(("commplan/", "seqmig/"))}
     for key, r in res.items():
         for eng in ("disagg", "fused_flat", "fused_hier"):
             rows.append((f"traffic/{key}/{eng}", r[eng] * 1e6, ""))
@@ -91,4 +149,30 @@ def run(sizes=(256, 1024)) -> list[tuple[str, float, str]]:
                  adaptive["adaptive_t"] * 1e6, ""))
     rows.append(("traffic/imbalanced/relayout_bytes_moved",
                  adaptive["bytes_moved"], "B"))
+    for key, r in commplan_rows.items():
+        if key.startswith("commplan/"):
+            pattern = key.split("/", 1)[1]
+            rows.append((f"traffic/dedup/{pattern}/cross_rows_dense",
+                         r["dense_cross"], "rows"))
+            rows.append((f"traffic/dedup/{pattern}/cross_rows_dedup",
+                         r["cond_cross"], "rows"))
+            rows.append((f"traffic/dedup/{pattern}/cross_rows_saved",
+                         r["dense_cross"] - r["cond_cross"], "rows"))
+            rows.append((f"traffic/dedup/{pattern}/dense_t",
+                         r["dense_t"] * 1e6, ""))
+            rows.append((f"traffic/dedup/{pattern}/dedup_t",
+                         r["dedup_t"] * 1e6, ""))
+            # modeled flat/hier cost ratio: <1 -> flat wins on that wire
+            rows.append((f"traffic/crossover/{pattern}/fast_wire",
+                         r["fast_wire_ratio"], f"x ({r['fast_wire']})"))
+            rows.append((f"traffic/crossover/{pattern}/slow_wire",
+                         r["slow_wire_ratio"], f"x ({r['slow_wire']})"))
+        else:
+            tag = key.split("/", 1)[1]
+            rows.append((f"traffic/seqmig/{tag}/maxrank_before",
+                         r["before"], "load"))
+            rows.append((f"traffic/seqmig/{tag}/maxrank_after",
+                         r["after"], "load"))
+            rows.append((f"traffic/seqmig/{tag}/rows_moved",
+                         r["rows_moved"], "seqs"))
     return rows

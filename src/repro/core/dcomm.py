@@ -115,6 +115,13 @@ class DcommConfig:
     node_size: int = 4                    # lanes per (virtual) node; multi-pod: =model size
     capacity_factor: float = 2.0
     use_balancer: bool = True             # Online Load Balancer on/off (§5.4)
+    # dispatch-side dedup/condense (commplan): ship ONE wire row per distinct
+    # (token, dest lane) pair — duplicates from a token's top-k hitting the
+    # same lane (a fortiori the same remote expert) are expanded on the
+    # landing side from piggybacked metadata.  Honored when the flat wire is
+    # taken (fused_flat); other engines ignore it (fused_hier already dedups
+    # at node level), so the flag can ride in a mixed per-layer config.
+    dedup: bool = False
     # fused_pipe slice knobs: 0 slices = auto via pipesim.plan_slices at the
     # hardware point below (defaults: TPU v5e HBM staging / ICI wire).
     pipe_slices: int = 0
@@ -220,6 +227,75 @@ def flat_combine(expert_out: jax.Array, res: DispatchResult,
     w = plan.gate_of_slot[:, None].astype(buf.dtype)
     y = jnp.zeros((t, d), buf.dtype).at[drop_neg(plan.src_of_slot, t)].add(
         buf * w, mode="drop")
+    return y
+
+
+# ======================================================================
+# fused_flat + dedup/condense (commplan mechanism b)
+# ======================================================================
+
+def dedup_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
+                   placement: ExpertPlacement,
+                   cfg: DcommConfig) -> DispatchResult:
+    """Condensed flat dispatch: one wire row per distinct (token, dest lane).
+
+    Same single tiled exchange as ``flat_dispatch`` but over the condensed
+    plan — duplicate (source, destination) pairs created by a token's top-k
+    landing several experts on one lane (replicated hot experts, small
+    node counts) share a row.  The landing lane expands rows per local
+    expert from the piggybacked metadata (``build_stage2_plan`` with
+    ``node_size=1`` — a purely local gather, no second exchange), so the
+    expert FFN sees exactly the grouped layout of the dense path.
+    """
+    t, d = x.shape
+    k = A.shape[1]
+    ep = placement.ep
+    e_local = placement.experts_per_lane
+    # condensed rows per dest lane: distinct lanes per token <= min(k, ep)
+    c1 = _cap(t * min(k, ep) / ep, cfg.capacity_factor)
+    # expansion rows per local expert: the landing lane receives ~t*k
+    # assignments from ALL lanes, spread over its e_local groups (total
+    # buffer rows e_local*c2 == the dense flat engine's ep*e_local*cap)
+    c2 = _cap(t * k / e_local, cfg.capacity_factor)
+
+    plan1 = planner_lib.build_condensed_plan(A, gates, placement, c1)
+    buf = gather_rows(x, plan1.src_of_slot)                  # (EP*C1, d)
+    buf = _flat_exchange(buf.reshape(ep, c1, d), cfg, ep)
+    me = _flat_exchange(plan1.meta_expert.reshape(ep, c1, k), cfg, ep)
+    mg = _flat_exchange(plan1.meta_gate.reshape(ep, c1, k), cfg, ep)
+
+    # fan-out expansion, local to the landing lane (node_size=1: keys are
+    # this lane's local expert indices directly)
+    plan2 = planner_lib.build_stage2_plan(
+        me.reshape(ep * c1, k), mg.reshape(ep * c1, k), 1, e_local, c2)
+    buf2 = gather_rows(buf.reshape(ep * c1, d), plan2.src_of_slot)
+    expert_rows = buf2.reshape(1, e_local, c2, d)
+    row_gates = plan2.gate_of_slot.reshape(1, e_local, c2)
+    return DispatchResult(expert_rows, row_gates,
+                          (plan1, plan2, t, d, c1, c2),
+                          plan1.dropped + plan2.slots.dropped())
+
+
+def dedup_combine(expert_out: jax.Array, res: DispatchResult,
+                  placement: ExpertPlacement, cfg: DcommConfig) -> jax.Array:
+    """Combine for the condensed path: gate at the expert, pre-reduce the
+    lane's per-row partials (the reverse of the fan-out expansion), reverse
+    the condensed exchange, scatter-add home.  The wire carries condensed
+    bytes both directions — the same property ``fused_hier`` has at node
+    level, here at lane level with zero extra hops."""
+    plan1, plan2, t, d, c1, c2 = res.state
+    ep = placement.ep
+    out = expert_out * res.row_gates[..., None].astype(expert_out.dtype)
+    out = out.reshape(-1, d)
+    # landing-lane pre-combine: sum this lane's expert partials per wire row
+    part = jnp.zeros((ep * c1, d), out.dtype).at[
+        drop_neg(plan2.src_of_slot, ep * c1)].add(out, mode="drop")
+    part = _flat_exchange(part.reshape(ep, c1, d), cfg, ep, reverse=True)
+    # origin: gates were applied at the expert, dedup handled by the
+    # landing-lane pre-combine — plain scatter-add per condensed row.
+    y = jnp.zeros((t, d), part.dtype).at[
+        drop_neg(plan1.src_of_slot, t)].add(part.reshape(ep * c1, d),
+                                            mode="drop")
     return y
 
 

@@ -57,6 +57,8 @@ def swiglu_experts(rows: jax.Array, w1: jax.Array, w3: jax.Array,
 def dispatch(x, A, gates, placement: ExpertPlacement, cfg: DcommConfig,
              assignment=None) -> DispatchResult:
     if cfg.engine == "fused_flat":
+        if cfg.dedup:
+            return dcomm.dedup_dispatch(x, A, gates, placement, cfg)
         return dcomm.flat_dispatch(x, A, gates, placement, cfg)
     if cfg.engine == "fused_pipe":
         return dcomm.pipe_dispatch(x, A, gates, placement, cfg)
@@ -73,6 +75,8 @@ def dispatch(x, A, gates, placement: ExpertPlacement, cfg: DcommConfig,
 def combine(expert_out, res: DispatchResult, placement, cfg: DcommConfig,
             gates=None) -> jax.Array:
     if cfg.engine == "fused_flat":
+        if cfg.dedup:
+            return dcomm.dedup_combine(expert_out, res, placement, cfg)
         return dcomm.flat_combine(expert_out, res, placement, cfg)
     if cfg.engine == "fused_pipe":
         return dcomm.pipe_combine(expert_out, res, placement, cfg)

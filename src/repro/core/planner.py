@@ -166,6 +166,68 @@ def build_hier_plan(A: jax.Array, gates: jax.Array, placement: ExpertPlacement,
                     slots.dropped())
 
 
+class CondensedPlan(NamedTuple):
+    """Lane-level condensed dispatch plan (per shard, sender side).
+
+    The dedup/condense analogue of :class:`HierPlan` one level down: one wire
+    row per distinct **(token, destination lane)** pair instead of one per
+    (token, k) assignment, with the assignments targeting that lane carried as
+    piggybacked (local-expert, gate) metadata.  Since every lane belongs to
+    exactly one node, condensing at lane granularity also condenses every
+    (source node → remote expert) duplicate the coarser node-level statement
+    implies — and unlike node-level forwarding it needs no second exchange:
+    the fan-out expansion runs locally on the landing lane.
+    """
+    slots: SlotTable            # (T, EP) -> row in (EP * C) wire buffer; -1 if
+                                # token has no assignment on that lane
+    src_of_slot: jax.Array      # (R,) source token row per wire row, -1 empty
+    meta_expert: jax.Array      # (R, K) local expert index on the dest lane, -1 pad
+    meta_gate: jax.Array        # (R, K) gates aligned with meta_expert
+    dropped: jax.Array          # () condensed rows lost to capacity overflow
+
+
+def build_condensed_plan(A: jax.Array, gates: jax.Array,
+                         placement: ExpertPlacement,
+                         capacity: int) -> CondensedPlan:
+    """Dedup/condense descriptors: one wire row per (token, dest lane).
+
+    Tokens whose top-k hits several experts on the SAME lane ride one row;
+    the landing side expands it per local expert from the piggybacked
+    metadata (``build_stage2_plan`` with ``node_size=1``).  Exact by
+    construction: the expansion re-applies every (expert, gate) pair the
+    dense plan would have shipped separately.
+    """
+    t, k = A.shape
+    ep = placement.ep
+    replica = balanced_replica_choice(A, placement)
+    lane = placement.lane_of_expert(A, replica)                  # (T, K)
+    e_local = placement.local_expert_index(A, replica)           # (T, K)
+
+    # --- dedup: does token t use lane l?  (T, EP) one-hot-of-any -----------
+    uses_lane = jnp.zeros((t, ep), jnp.bool_).at[
+        jnp.arange(t)[:, None], lane].set(True)
+    key = jnp.where(uses_lane, jnp.arange(ep, dtype=I32)[None, :], -1)
+    slots = build_slot_table(key, ep, capacity)
+    token_ids = jnp.broadcast_to(jnp.arange(t, dtype=I32)[:, None], key.shape)
+    src_of_slot = _inverse_slot(slots, token_ids)                # (R,)
+
+    # --- piggybacked expert-level metadata ---------------------------------
+    # per (t, lane): the k-assignments targeting that lane, as the dest
+    # lane's local expert index; -1 invalid.
+    enc_tl = jnp.where(lane[:, None, :] == jnp.arange(ep)[None, :, None],
+                       e_local[:, None, :], -1)                  # (T, EP, K)
+    gate_tl = jnp.where(enc_tl >= 0, gates[:, None, :], 0)       # (T, EP, K)
+
+    r = slots.total_rows
+    flat_slot = drop_neg(slots.slot.reshape(-1), r)
+    meta_expert = jnp.full((r, k), -1, I32).at[flat_slot].set(
+        enc_tl.reshape(-1, k), mode="drop")
+    meta_gate = jnp.zeros((r, k), gates.dtype).at[flat_slot].set(
+        gate_tl.reshape(-1, k), mode="drop")
+    return CondensedPlan(slots, src_of_slot, meta_expert, meta_gate,
+                         slots.dropped())
+
+
 class Stage2Plan(NamedTuple):
     """Expert-level distribution descriptors, built on the forwarder."""
     slots: SlotTable            # (R1, K) -> row in (node_size * E_local * C2) buffer

@@ -43,6 +43,18 @@ class TrafficState(NamedTuple):
     lane_send_ema: jax.Array    # (EP,) EMA of per-lane cross-node send rows
     last_expert_count: jax.Array  # (E,) raw counts of the latest observation
     steps: jax.Array            # () int32 observations so far
+    # Comm-path planning signals (``core/commplan.py``).  Three granularities
+    # of the same send volume, one per comm path: ``lane_node_ema`` counts
+    # EVERY (token, k) assignment into its destination node (dense flat wire
+    # rows, own-node column included), ``lane_send_ema`` above counts
+    # node-DEDUPLICATED cross-node rows (hier stage-1 wire rows), and
+    # ``lane_cond_ema`` counts lane-CONDENSED (token, dest-lane) rows (the
+    # dedup/condense flat engine's wire rows).  The node axis is padded to EP
+    # (an upper bound on n_nodes for any node_size >= 1) so the state's shape
+    # never depends on the placement — columns at index >= placement.n_nodes
+    # stay zero; consumers slice ``[..., :n_nodes]``.
+    lane_node_ema: jax.Array    # (EP, EP) EMA assignment-level lane→node rows
+    lane_cond_ema: jax.Array    # (EP,) EMA condensed (token, dest-lane) rows
 
 
 def init_traffic_state(n_experts: int, ep: int,
@@ -52,7 +64,8 @@ def init_traffic_state(n_experts: int, ep: int,
             shape = (n_layers,) + shape
         return jnp.zeros(shape, F32)
     steps = jnp.zeros((n_layers,) if n_layers is not None else (), jnp.int32)
-    return TrafficState(z((n_experts,)), z((ep,)), z((n_experts,)), steps)
+    return TrafficState(z((n_experts,)), z((ep,)), z((n_experts,)), steps,
+                        z((ep, ep)), z((ep,)))
 
 
 def observe(state: TrafficState, A: jax.Array, placement, src_lane,
@@ -97,20 +110,39 @@ def observe(state: TrafficState, A: jax.Array, placement, src_lane,
         jnp.arange(t)[:, None], node].set(True)
     cross = (uses & (jnp.arange(n_nodes)[None, :] != my_node[:, None])).sum(
         axis=1).astype(F32)                                   # (T,)
+    # lane-deduplicated (condensed-flat semantics): one row per (token, lane)
+    uses_lane = jnp.zeros((t, placement.ep), jnp.bool_).at[
+        jnp.arange(t)[:, None], lane].set(True)
+    cond = uses_lane.sum(axis=1).astype(F32)                  # (T,)
+    valid_f = None
     if valid is not None:
-        cross = cross * valid.astype(F32)
+        valid_f = valid.astype(F32)
+        cross = cross * valid_f
+        cond = cond * valid_f
     lane_cnt = jnp.zeros((placement.ep,), F32).at[src_lane].add(cross)
+    cond_cnt = jnp.zeros((placement.ep,), F32).at[src_lane].add(cond)
+    # Full lane→node send matrix at ASSIGNMENT granularity (one count per
+    # (token, k) pair — the dense flat engine's wire rows; own-node column
+    # kept so the intra/inter split is the consumer's choice).
+    w_tk = (jnp.ones(node.shape, F32) if valid_f is None
+            else jnp.broadcast_to(valid_f[:, None], node.shape))
+    node_cnt = jnp.zeros((placement.ep, placement.ep), F32).at[
+        jnp.broadcast_to(src_lane[:, None], node.shape), node].add(w_tk)
 
     for ax in axis_names:
         e_cnt = jax.lax.psum(e_cnt, ax)
         lane_cnt = jax.lax.psum(lane_cnt, ax)
+        cond_cnt = jax.lax.psum(cond_cnt, ax)
+        node_cnt = jax.lax.psum(node_cnt, ax)
 
     d = jnp.asarray(decay, F32)
     return TrafficState(
         expert_ema=d * state.expert_ema + (1 - d) * e_cnt,
         lane_send_ema=d * state.lane_send_ema + (1 - d) * lane_cnt,
         last_expert_count=e_cnt,
-        steps=state.steps + 1)
+        steps=state.steps + 1,
+        lane_node_ema=d * state.lane_node_ema + (1 - d) * node_cnt,
+        lane_cond_ema=d * state.lane_cond_ema + (1 - d) * cond_cnt)
 
 
 def has_stats(state: TrafficState) -> jax.Array:

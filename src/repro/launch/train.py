@@ -19,7 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpointer
 from repro.configs import get_arch
-from repro.core import relayout, traffic as traffic_lib
+from repro.core import commplan, relayout, traffic as traffic_lib
 from repro.data.pipeline import ShardedLoader, SyntheticLM, ZipfNgramLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as steps_mod
@@ -109,14 +109,25 @@ def save_traffic_state(ckpt_dir: str, traffic, step: int) -> None:
 
 def load_traffic_state(ckpt_dir: str, like):
     """-> (TrafficState, saved_step) matching ``like``'s shapes, or None when
-    there is no sidecar or it was written for a different model shape."""
+    there is no sidecar or it was written for a different model shape.
+
+    Fields ``like`` has but the sidecar lacks are zero-filled: a sidecar
+    written before the state grew a field (e.g. the commplan lane→node
+    matrix) still resumes warm — the missing accumulator restarts cold and
+    re-warms within its EMA horizon, instead of discarding the whole state
+    (or worse, crashing the resume).  A PRESENT key with the wrong shape
+    still means a different model and returns None.
+    """
     path = _traffic_path(ckpt_dir)
     if not os.path.exists(path):
         return None
     z = np.load(path)
     leaves = {}
     for k, want in like._asdict().items():
-        if k not in z or z[k].shape != tuple(want.shape):
+        if k not in z:
+            leaves[k] = jnp.zeros_like(want)
+            continue
+        if z[k].shape != tuple(want.shape):
             return None
         leaves[k] = jnp.asarray(z[k].astype(np.asarray(want).dtype))
     return type(like)(**leaves), int(z["step"])
@@ -160,7 +171,26 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-sized variant of the arch (CPU)")
-    ap.add_argument("--engine", default="fused_hier")
+    ap.add_argument("--engine", default="fused_hier",
+                    help="dComm engine for the MoE shuffle (fused_flat | "
+                         "fused_pipe | fused_hier | disagg | ragged), or "
+                         "'auto' to let the comm-path policy "
+                         "(core/commplan.py) pick flat vs hier PER LAYER "
+                         "from the online traffic stats at each relayout "
+                         "boundary (moe family; needs --relayout-every). "
+                         "Naming an engine is the manual override: the "
+                         "policy never touches it")
+    ap.add_argument("--dedup", action="store_true",
+                    help="dispatch-side dedup/condense: ship one wire row "
+                         "per distinct (token, dest lane) pair and expand "
+                         "on the landing side (fused_flat engine, incl. "
+                         "flat layers under --engine auto)")
+    ap.add_argument("--seq-migrate", action="store_true",
+                    help="sequence migration: rebalance whole sequences "
+                         "across data ranks per batch (LPT over a per-"
+                         "sequence routing-diversity proxy — distinct-token "
+                         "count), with relayout-style bytes-moved "
+                         "accounting")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
@@ -205,13 +235,25 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh()
-    ctx = make_context(cfg, mesh, multi_pod=False, engine=args.engine,
+    # --engine auto: the comm-path policy replans per layer at relayout
+    # boundaries; until the first plan (cold EMA) every layer runs the
+    # default engine below.  Only the moe family has per-layer islands —
+    # stream families share one schedule per block and stay single-engine.
+    auto_engine = args.engine == "auto"
+    if auto_engine and cfg.family != "moe":
+        print(f"[commplan] --engine auto needs per-layer MoE islands "
+              f"(family {cfg.family!r}); falling back to fused_hier",
+              flush=True)
+        auto_engine = False
+    base_engine = "fused_hier" if args.engine == "auto" else args.engine
+    ctx = make_context(cfg, mesh, multi_pod=False, engine=base_engine,
                        capacity_factor=args.capacity_factor,
                        node_size=max(1, mesh.shape["model"] // 2),
                        moe_stream=args.moe_stream,
                        moe_interleave=args.moe_interleave,
                        pipe_slices=args.pipe_slices,
-                       traffic_decay=args.traffic_decay)
+                       traffic_decay=args.traffic_decay,
+                       dedup=args.dedup)
     # resuming a run that relayouted: the checkpoint's weights are laid out
     # per the placement-history sidecar, not the arithmetic map
     if cfg.moe is not None and cfg.family in ("moe", "moe_ffn", "moe_tx"):
@@ -270,7 +312,8 @@ def main(argv=None):
                               f"{tstep}", flush=True)
         box = {"ctx": ctx, "bundle": bundle, "step_fn": step_fn,
                "traffic": traffic, "n": 0, "fence": False,
-               "history": [(0, ctx.placement)]}
+               "history": [(0, ctx.placement)],
+               "seq_rows": 0, "seq_bytes": 0}
 
         def rebuild(new_ctx):
             box["ctx"] = new_ctx
@@ -319,8 +362,29 @@ def main(argv=None):
                               for k, v in ispecs.items()})
         bshard = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
 
+        n_data_ranks = mesh.shape["data"]
+
         def batch_at(step):
             host = source.batch_at(step)
+            if args.seq_migrate and n_data_ranks > 1:
+                # per-sequence routing-diversity proxy: sequences touching
+                # more distinct tokens route to more experts/nodes (the
+                # CPU-honest stand-in for measured per-sequence send load)
+                tok = np.asarray(host["tokens"])
+                loads = np.array([np.unique(row).size for row in tok],
+                                 np.float64)
+                row_bytes = sum(np.asarray(v)[0].nbytes
+                                for v in host.values()
+                                if np.asarray(v).shape[:1] == tok.shape[:1])
+                perm, stats = commplan.plan_sequence_migration(
+                    loads, n_data_ranks, row_bytes=row_bytes)
+                if stats["rows_moved"]:
+                    host = {k: (v[perm]
+                                if np.asarray(v).shape[:1] == tok.shape[:1]
+                                else v)
+                            for k, v in host.items()}
+                box["seq_rows"] += stats["rows_moved"]
+                box["seq_bytes"] += stats["bytes_moved"]
             return {k: jax.device_put(v, bshard[k]) for k, v in host.items()}
 
         t_hist = []
@@ -343,15 +407,42 @@ def main(argv=None):
             if n % args.log_every == 1:
                 print(f"step {n:5d}  loss {loss:.4f}  "
                       f"{np.mean(t_hist[-args.log_every:]):.3f}s/step", flush=True)
+                if args.seq_migrate:
+                    print(f"[seqmig] {box['seq_rows']} sequences moved "
+                          f"({box['seq_bytes'] / 1e6:.2f} MB) so far",
+                          flush=True)
             if (args.relayout_every and box["traffic"] is not None
                     and box["n"] % args.relayout_every == 0):
+                # comm-path policy BEFORE the swap: the EMA send matrices
+                # were measured under the placement being retired
+                decisions = None
+                if auto_engine:
+                    decisions = commplan.plan_paths(
+                        box["traffic"], box["ctx"].placement,
+                        row_bytes=cfg.d_model * 2,   # one bf16 token row
+                        costs=commplan.LinkCosts.from_dcomm(box["ctx"].dcfg),
+                        dedup=args.dedup, default=base_engine)
+                    summ = commplan.summarize_decisions(decisions)
+                    print(f"[commplan] step {box['n']}: "
+                          f"{summ['n_flat']} flat / {summ['n_hier']} hier "
+                          f"layers ({summ['n_cold']} cold) — "
+                          + " ".join(f"L{i}:{'F' if e == 'fused_flat' else 'H'}"
+                                     for i, e in enumerate(summ["per_layer"])),
+                          flush=True)
                 params, opt, new_ctx, _ = apply_relayout(
                     params, opt, box["traffic"], box["ctx"])
+                if decisions is not None:
+                    new_ctx = dataclasses.replace(
+                        new_ctx,
+                        engines=tuple(d.engine for d in decisions))
                 # expert counts stay valid across the swap, but the per-lane
-                # send EMA was measured under the OLD table — restart it cold
-                # rather than misattribute forwarder load for an EMA horizon
+                # EMAs (send rows, lane→node matrix, condensed rows) were
+                # measured under the OLD table — restart them cold rather
+                # than misattribute forwarder load for an EMA horizon
                 box["traffic"] = box["traffic"]._replace(
-                    lane_send_ema=jnp.zeros_like(box["traffic"].lane_send_ema))
+                    lane_send_ema=jnp.zeros_like(box["traffic"].lane_send_ema),
+                    lane_node_ema=jnp.zeros_like(box["traffic"].lane_node_ema),
+                    lane_cond_ema=jnp.zeros_like(box["traffic"].lane_cond_ema))
                 # the placement table is baked into the jitted step — re-jit;
                 # amortized over the relayout cadence (DESIGN.md §traffic)
                 rebuild(new_ctx)

@@ -59,6 +59,13 @@ class ModelContext:
     # EMA decay of the online traffic statistics (when a TrafficState is
     # threaded through the forward)
     traffic_decay: float = 0.99
+    # moe family: per-layer engine override from the comm-path policy
+    # (``core/commplan.plan_paths``) — a length-n_layers tuple of engine
+    # names; the layer scan splits into contiguous same-engine runs (engine
+    # choice is trace-time static).  None = ``dcfg.engine`` everywhere.
+    # Stream families (moe_ffn / moe_tx) share one schedule per block and
+    # keep the single-engine dcfg.
+    engines: tuple | None = None
 
     def tp_eligible(self):
         """Explicit Megatron-TP blocks need head-divisible archs, plain RoPE,
@@ -114,7 +121,8 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
                  use_balancer: bool = True, node_size: int | None = None,
                  remat: bool = True, moe_stream: int = 0,
                  moe_interleave: int = 1, pipe_slices: int = 0,
-                 traffic_decay: float = 0.99) -> ModelContext:
+                 traffic_decay: float = 0.99,
+                 dedup: bool = False) -> ModelContext:
     placement = dcfg = None
     if cfg.moe is not None:
         axes = dict(mesh.shape)
@@ -125,7 +133,7 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
         dcfg = DcommConfig(engine=engine, ep_axis=ep_axis, node_size=ns,
                            capacity_factor=capacity_factor,
                            use_balancer=use_balancer,
-                           pipe_slices=pipe_slices)
+                           pipe_slices=pipe_slices, dedup=dedup)
     fsdp = False
     if cfg.moe is not None:
         per_lane_gb = (max(1, placement.experts_per_lane) * 3 * cfg.d_model
@@ -246,6 +254,19 @@ def _layer_runs(cfg: ArchConfig):
     for i in range(1, cfg.n_layers + 1):
         if i == cfg.n_layers or flags[i] != flags[s]:
             runs.append((s, i, flags[s]))
+            s = i
+    return runs
+
+
+def _engine_runs(engines):
+    """Contiguous (start, end, engine) runs of a per-layer engine list —
+    the comm-path policy's analogue of :func:`_layer_runs`."""
+    runs = []
+    s = 0
+    n = len(engines)
+    for i in range(1, n + 1):
+        if i == n or engines[i] != engines[s]:
+            runs.append((s, i, engines[s]))
             s = i
     return runs
 
@@ -410,7 +431,8 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
         return h, jax.tree.map(
             lambda a: a.reshape((L,) + a.shape[2:]), new_traffic)
 
-    def layer_fn(h, lp, is_global=False):
+    def layer_fn(h, lp, is_global=False, dcfg=None):
+        dcfg = ctx.dcfg if dcfg is None else dcfg
         tr = None
         if traffic is not None:
             lp, tr = lp
@@ -447,7 +469,7 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
             if cfg.family == "moe":
                 x = rms_norm(h, lp["ln2"])     # island is sequence-sharded
                 y = moe_block(x, lp["moe"], mesh=ctx.mesh,
-                              placement=ctx.placement, dcfg=ctx.dcfg,
+                              placement=ctx.placement, dcfg=dcfg,
                               top_k=cfg.moe.top_k, data_axes=ctx.data_axes,
                               norm_topk=cfg.moe.norm_topk,
                               fsdp=ctx.fsdp_experts, traffic=tr,
@@ -478,7 +500,31 @@ def forward_hidden(params, inputs, positions, ctx: ModelContext,
         return h, tr
 
     xs = params["layers"] if traffic is None else (params["layers"], traffic)
-    h, new_traffic = _scan_layers(layer_fn, h, xs, cfg, ctx.remat)
+    if cfg.family == "moe" and ctx.engines is not None:
+        # comm-path policy: per-layer engine choice is trace-time static, so
+        # the layer scan splits into contiguous same-engine runs — the same
+        # segmentation trick the hybrid family uses for global/SWA windows.
+        if len(ctx.engines) != cfg.n_layers:
+            raise ValueError(
+                f"ctx.engines has {len(ctx.engines)} entries for "
+                f"{cfg.n_layers} layers")
+        ys_all = []
+        for a, b, eng in _engine_runs(ctx.engines):
+            seg = jax.tree.map(lambda x: x[a:b], xs)
+            dcfg_run = dataclasses.replace(
+                ctx.dcfg, engine=eng,
+                dedup=ctx.dcfg.dedup and eng == "fused_flat")
+            body = partial(layer_fn, is_global=False, dcfg=dcfg_run)
+            body = jax.checkpoint(body) if ctx.remat else body
+            h, ys = jax.lax.scan(body, h, seg)
+            ys_all.append(ys)
+        if ys_all and ys_all[0] is not None and jax.tree.leaves(ys_all[0]):
+            new_traffic = jax.tree.map(
+                lambda *x: jnp.concatenate(x, 0), *ys_all)
+        else:
+            new_traffic = None
+    else:
+        h, new_traffic = _scan_layers(layer_fn, h, xs, cfg, ctx.remat)
     h = rms_norm(h, params["final_norm"].astype(cd))
     return h if traffic is None else (h, new_traffic)
 

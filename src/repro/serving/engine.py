@@ -67,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import relayout, traffic as traffic_lib
+from repro.core import commplan, relayout, traffic as traffic_lib
 from repro.models import lm
 
 TRAFFIC_FAMILIES = ("moe", "moe_ffn", "moe_tx")
@@ -289,6 +289,16 @@ class _ServingBase:
                 np.max([w["lane_imbalance"] for w in self.wave_loads]))
             out["mean_top_expert_share"] = float(
                 np.mean([w["top_expert_share"] for w in self.wave_loads]))
+        if self.traffic is not None:
+            ctx = self.bundle.ctx
+            decisions = commplan.plan_paths(
+                self.traffic, ctx.placement,
+                row_bytes=ctx.cfg.d_model * jnp.dtype(ctx.compute_dtype).itemsize,
+                costs=commplan.LinkCosts.from_dcomm(ctx.dcfg),
+                dedup=ctx.dcfg.dedup, default=ctx.dcfg.engine)
+            out["comm_path"] = commplan.summarize_decisions(decisions)
+            out["comm_path"]["dedup"] = commplan.dedup_savings(
+                self.traffic, ctx.placement)
         return out
 
 

@@ -1,0 +1,233 @@
+"""Comm-path planning (``core/commplan.py``): the host-side policy that turns
+online traffic EMAs into per-layer flat/hier decisions, dedup accounting and
+sequence-migration plans.
+
+Pure numpy/host-side — no mesh, no subprocess.  The cost model is structural
+(bytes-on-tier, not wall clock), so these tests pin DIRECTIONS: which path
+wins as the traffic shape changes, never absolute seconds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import commplan, traffic
+from repro.core.commplan import (LinkCosts, dedup_savings, estimate_path_costs,
+                                 plan_paths, plan_sequence_migration,
+                                 summarize_decisions)
+from repro.core.dcomm import DcommConfig
+from repro.core.routing import ExpertPlacement
+
+
+def _state(ep, lane_node, cond=None, send1=None, steps=1, n_experts=8):
+    """Hand-built single-layer TrafficState with the commplan signals set."""
+    st = traffic.init_traffic_state(n_experts, ep)
+    m = np.zeros((ep, ep), np.float32)
+    ln = np.asarray(lane_node, np.float32)
+    m[:, :ln.shape[1]] = ln
+    dense = m.sum()
+    return st._replace(
+        steps=jnp.int32(steps),
+        lane_node_ema=jnp.asarray(m),
+        lane_cond_ema=jnp.asarray(np.full((ep,), dense / ep, np.float32)
+                                  if cond is None else np.asarray(cond)),
+        lane_send_ema=jnp.asarray(np.zeros((ep,), np.float32)
+                                  if send1 is None else np.asarray(send1)))
+
+
+# --------------------------------------------------------------------- costs
+
+
+def test_cold_state_yields_default_engine():
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    st = traffic.init_traffic_state(8, 4)
+    for default in ("fused_hier", "fused_flat"):
+        d = estimate_path_costs(st, placement, row_bytes=64, default=default)
+        assert d.cold and d.engine == default
+        assert np.isnan(d.flat_s) and np.isnan(d.hier_s)
+
+
+def test_intra_node_traffic_prefers_flat():
+    # all rows stay on the sender's own node: hier's extra hop buys nothing
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    ln = np.zeros((4, 2))
+    ln[np.arange(4), np.arange(4) // 2] = 100.0       # own-node column only
+    d = estimate_path_costs(_state(4, ln, send1=np.zeros(4)), placement,
+                            row_bytes=64)
+    assert not d.cold and d.engine == "fused_flat"
+    assert d.flat_s < d.hier_s
+
+
+def test_duplicate_heavy_cross_traffic_prefers_hier():
+    # heavy cross-node volume that node-dedups 8x: hier's stage-1 wire carries
+    # an eighth of flat's slow-tier bytes
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    # volumes large enough that bandwidth, not the fixed hop overhead,
+    # decides (tiny token counts correctly favor the single-hop flat path)
+    ln = np.full((4, 2), 4e5)                         # half the rows cross
+    d = estimate_path_costs(_state(4, ln, send1=np.full(4, 5e4)), placement,
+                            row_bytes=64)
+    assert not d.cold and d.engine == "fused_hier"
+    assert d.hier_s < d.flat_s
+
+
+def test_dedup_flag_shrinks_flat_cost_only():
+    # same traffic, dedup on: flat rows scale by the measured condensation
+    # ratio, hier is untouched — dedup can flip the decision back to flat
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    ln = np.full((4, 2), 400.0)
+    st = _state(4, ln, cond=np.full(4, 100.0), send1=np.full(4, 50.0))
+    dense = estimate_path_costs(st, placement, row_bytes=64, dedup=False)
+    ded = estimate_path_costs(st, placement, row_bytes=64, dedup=True)
+    assert ded.flat_s < dense.flat_s
+    assert ded.hier_s == pytest.approx(dense.hier_s)
+
+
+def test_slower_wire_pushes_toward_hier():
+    # decision is monotone in the wire bandwidth: squeeze inter_bw until the
+    # node-dedup'd stage-1 wins
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    st = _state(4, np.full((4, 2), 100.0), send1=np.full(4, 60.0))
+    fast = estimate_path_costs(st, placement, row_bytes=64,
+                               costs=LinkCosts(inter_bw=800e9))
+    slow = estimate_path_costs(st, placement, row_bytes=64,
+                               costs=LinkCosts(inter_bw=1e9))
+    assert fast.engine == "fused_flat"
+    assert slow.engine == "fused_hier"
+
+
+def test_linkcosts_from_dcomm_reads_pipe_point():
+    cfg = DcommConfig(engine="fused_flat", ep_axis="model",
+                      pipe_stage_bw=7e9, pipe_wire_bw=3e9,
+                      pipe_overhead_s=5e-6)
+    c = LinkCosts.from_dcomm(cfg)
+    assert (c.intra_bw, c.inter_bw, c.hop_overhead_s) == (7e9, 3e9, 5e-6)
+
+
+# ---------------------------------------------------------------- plan_paths
+
+
+def test_plan_paths_per_layer_and_summary():
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    flat_st = _state(4, np.stack([np.array([100.0, 0.0])] * 4),
+                     send1=np.zeros(4))
+    # stack 3 layers: intra-only (flat), cold, duplicate-heavy (hier)
+    hier_st = _state(4, np.full((4, 2), 4e5), send1=np.full(4, 5e4))
+    cold_st = traffic.init_traffic_state(8, 4)
+    stacked = jax.tree.map(lambda *x: jnp.stack(x), flat_st, cold_st, hier_st)
+    decisions = plan_paths(stacked, placement, row_bytes=64,
+                           default="fused_hier")
+    assert [d.engine for d in decisions] == ["fused_flat", "fused_hier",
+                                             "fused_hier"]
+    assert [d.cold for d in decisions] == [False, True, False]
+    s = summarize_decisions(decisions)
+    assert (s["n_flat"], s["n_hier"], s["n_cold"]) == (1, 2, 1)
+    assert len(s["per_layer"]) == 3
+    # unstacked state -> single decision
+    assert len(plan_paths(flat_st, placement, row_bytes=64)) == 1
+
+
+def test_plan_paths_from_real_observation():
+    # end-to-end: observe() -> plan_paths on the EMAs it populated
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    st = traffic.init_traffic_state(8, 4)
+    A = jax.random.randint(jax.random.PRNGKey(0), (64, 2), 0, 8)
+    st = traffic.observe(st, A, placement, src_lane=0, decay=0.5)
+    (d,) = plan_paths(st, placement, row_bytes=64)
+    assert not d.cold and d.engine in ("fused_flat", "fused_hier")
+    assert d.dense_rows > 0 and np.isfinite(d.flat_s) and np.isfinite(d.hier_s)
+
+
+def test_dedup_savings_accounting():
+    placement = ExpertPlacement(n_experts=8, ep=4, node_size=2)
+    st = _state(4, np.full((4, 2), 100.0), cond=np.full(4, 50.0))
+    s = dedup_savings(st, placement)
+    assert s["dense_rows"] == pytest.approx(800.0)
+    assert s["cond_rows"] == pytest.approx(200.0)
+    assert s["rows_saved"] == pytest.approx(600.0)
+    assert s["frac_saved"] == pytest.approx(0.75)
+
+
+# ------------------------------------------------------- sequence migration
+
+
+def test_seq_migration_balanced_is_identity():
+    perm, stats = plan_sequence_migration(np.ones(8), 4, row_bytes=10)
+    np.testing.assert_array_equal(perm, np.arange(8))
+    assert stats["rows_moved"] == 0 and stats["bytes_moved"] == 0
+    assert stats["slots"] == 8
+
+
+def test_seq_migration_rebalances_hot_rank():
+    # rank 0 holds both heavy sequences; LPT must split them apart
+    loads = np.array([10.0, 9.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    perm, stats = plan_sequence_migration(loads, 4, row_bytes=100)
+    assert stats["max_load_before"] == pytest.approx(19.0)
+    assert stats["max_load_after"] == pytest.approx(11.0)
+    assert stats["rows_moved"] > 0
+    assert stats["bytes_moved"] == stats["rows_moved"] * 100
+    # perm is a valid permutation preserving the per-rank quota of 2
+    assert sorted(perm.tolist()) == list(range(8))
+    moved = loads[perm]
+    rank_after = moved.reshape(4, 2).sum(axis=1)
+    assert rank_after.max() == pytest.approx(11.0)
+
+
+def test_seq_migration_no_improvement_stays_put():
+    # quota binds: every rank keeps 2 rows, and the best quota-constrained
+    # assignment is no better than the status quo -> don't move bytes
+    loads = np.array([10.0, 1.0, 1.0, 1.0, 9.0, 1.0, 1.0, 1.0])
+    perm, stats = plan_sequence_migration(loads, 4)
+    np.testing.assert_array_equal(perm, np.arange(8))
+    assert stats["rows_moved"] == 0
+
+
+def test_seq_migration_threshold_gates_mild_imbalance():
+    loads = np.array([1.04, 1.0, 1.0, 1.0])        # 4% over mean: under gate
+    perm, stats = plan_sequence_migration(loads, 4, threshold=1.05)
+    assert stats["rows_moved"] == 0
+    perm2, stats2 = plan_sequence_migration(loads, 4, threshold=1.0)
+    assert stats2["max_load_after"] <= stats2["max_load_before"]
+
+
+def test_seq_migration_rejects_ragged_batch():
+    with pytest.raises(ValueError):
+        plan_sequence_migration(np.ones(7), 4)
+
+
+@pytest.mark.slow
+def test_train_auto_engine_end_to_end(tmp_path, multidevice):
+    """``--engine auto --dedup --seq-migrate``: the full loop — observe ->
+    plan_paths at the relayout boundary -> per-layer engine override ->
+    re-jit — must train through several relayout epochs and log its
+    decisions."""
+    code = f"""
+import contextlib, io
+from repro.launch import train
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    train.main(["--reduced", "--engine", "auto", "--dedup", "--seq-migrate",
+                "--relayout-every", "2", "--steps", "5", "--seq", "32",
+                "--batch", "4", "--log-every", "2",
+                "--ckpt-dir", {str(tmp_path)!r}])
+out = buf.getvalue()
+assert "[commplan] step 2:" in out, out
+assert "[commplan] step 4:" in out, out
+assert "flat" in out and "hier" in out, out
+print("AUTO_ENGINE_OK")
+"""
+    assert "AUTO_ENGINE_OK" in multidevice(code, 4, timeout=900)
+
+
+def test_seq_migration_permutation_property():
+    # random loads: result is always a quota-preserving permutation that
+    # never worsens the max rank load
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        loads = rng.zipf(1.5, size=16).astype(np.float64)
+        perm, stats = plan_sequence_migration(loads, 4)
+        assert sorted(perm.tolist()) == list(range(16))
+        after = loads[perm].reshape(4, 4).sum(axis=1)
+        assert after.max() <= stats["max_load_before"] + 1e-9
+        assert stats["max_load_after"] == pytest.approx(after.max())

@@ -299,8 +299,11 @@ def _grad_code(ep, node_size, engines):
 
 # fused_pipe appears twice: the auto slice count (pipesim) and a forced
 # 4-deep scan, which exercises the fully fused pipe_shuffle_ffn backward
-# (dispatch()/combine() is not what shuffle_ffn routes fused_pipe through)
-CPU_ENGINES = [("fused_flat", {}), ("fused_pipe", {"pipe_slices": 0}),
+# (dispatch()/combine() is not what shuffle_ffn routes fused_pipe through);
+# fused_flat also runs with dedup=True — the condensed wire's gather/scatter
+# pairs (landing-side fan-out, pre-combine reduction) must transpose exactly
+CPU_ENGINES = [("fused_flat", {}), ("fused_flat", {"dedup": True}),
+               ("fused_pipe", {"pipe_slices": 0}),
                ("fused_pipe", {"pipe_slices": 4}), ("fused_hier", {}),
                ("disagg", {})]
 

@@ -59,6 +59,13 @@ def test_serving_reports_per_wave_expert_load_stats():
         assert 0 < w["top_expert_share"] <= 1.0
     st = eng.stats()
     assert st["waves"] == 2 and st["mean_lane_imbalance"] >= 1.0
+    # comm-path planning report (core/commplan.py) rides the same traffic
+    cp = st["comm_path"]
+    assert len(cp["per_layer"]) == cfg.n_layers
+    assert cp["n_flat"] + cp["n_hier"] == cfg.n_layers
+    assert cp["n_cold"] == 0                     # every layer observed twice
+    assert cp["dedup"]["dense_rows"] > 0
+    assert 0.0 <= cp["dedup"]["frac_saved"] <= 1.0
 
 
 def test_serving_prefill_waves_as_interleave_lanes():

@@ -360,6 +360,35 @@ def test_traffic_sidecar_round_trip(tmp_path):
     assert load_traffic_state(str(tmp_path / "missing"), like) is None
 
 
+def test_traffic_sidecar_old_format_zero_fills(tmp_path):
+    """A sidecar written before TrafficState grew the commplan fields
+    (lane_node_ema / lane_cond_ema) must still resume warm: present leaves
+    restore bit-equal, missing leaves come back zero-filled — not None, and
+    never a KeyError."""
+    import os
+    from repro.launch.train import load_traffic_state, save_traffic_state
+    E, EP, L = 8, 4, 3
+    placement = ExpertPlacement(n_experts=E, ep=EP, node_size=2)
+    st = traffic.init_traffic_state(E, EP, n_layers=L)
+    st = jax.vmap(lambda s: traffic.observe(
+        s, _imbalanced(32, E, 2, seed=0), placement, 0, decay=0.9))(st)
+    save_traffic_state(str(tmp_path), st, step=5)
+    # rewrite the sidecar as the OLD format: drop the new accumulators
+    path = os.path.join(str(tmp_path), "traffic_ema.npz")
+    z = dict(np.load(path))
+    del z["lane_node_ema"], z["lane_cond_ema"]
+    np.savez(path, **z)
+    like = traffic.init_traffic_state(E, EP, n_layers=L)
+    loaded, saved_step = load_traffic_state(str(tmp_path), like)
+    assert saved_step == 5
+    np.testing.assert_array_equal(np.asarray(loaded.expert_ema),
+                                  np.asarray(st.expert_ema))
+    assert loaded.steps.tolist() == [1] * L          # counters stay warm
+    assert float(jnp.sum(loaded.lane_node_ema)) == 0.0   # cold restart
+    assert float(jnp.sum(loaded.lane_cond_ema)) == 0.0
+    assert loaded.lane_node_ema.shape == like.lane_node_ema.shape
+
+
 @pytest.mark.slow
 def test_train_resume_keeps_traffic_ema_warm(tmp_path, multidevice):
     """EMA continuity across a fresh-process resume: a second train.main run
@@ -383,6 +412,34 @@ assert z["expert_ema"].sum() > 0
 print("TRAFFIC_RESUME_OK")
 """
     assert "TRAFFIC_RESUME_OK" in multidevice(code, 2, timeout=900)
+
+
+@pytest.mark.slow
+def test_train_resume_from_old_format_sidecar(tmp_path, multidevice):
+    """Fresh-process resume from a PRE-commplan sidecar: after stripping the
+    lane_node_ema / lane_cond_ema keys (simulating a checkpoint dir written
+    by an older build), train.main must resume warm — counters continue, no
+    crash — with the missing accumulators restarting cold."""
+    code = f"""
+import numpy as np
+from repro.launch import train
+args = ["--arch", "moe-ffn-stream", "--reduced", "--engine", "fused_pipe",
+        "--moe-stream", "2", "--moe-interleave", "2", "--accum", "2",
+        "--seq", "32", "--batch", "4", "--ckpt-dir", {str(tmp_path)!r},
+        "--ckpt-every", "2", "--relayout-every", "3", "--log-every", "10"]
+train.main(args + ["--steps", "4"])
+path = {str(tmp_path)!r} + "/traffic_ema.npz"
+z = dict(np.load(path))
+del z["lane_node_ema"], z["lane_cond_ema"]    # old-format sidecar
+np.savez(path, **z)
+train.main(args + ["--steps", "6"])
+z = np.load(path)
+assert int(z["step"]) == 6, int(z["step"])
+assert (z["steps"] == 6).all(), z["steps"]    # 4 warm + 2 new, not cold 2
+assert "lane_node_ema" in z                   # re-saved in the new format
+print("OLD_SIDECAR_RESUME_OK")
+"""
+    assert "OLD_SIDECAR_RESUME_OK" in multidevice(code, 2, timeout=900)
 
 
 def test_placement_history_sidecar_round_trip(tmp_path):
