@@ -10,8 +10,8 @@ from __future__ import annotations
 from benchmarks.common import PREAMBLE, run_sub
 
 CODE = PREAMBLE + """
-# ~32 MB payload per lane: T rows x D f32
-T = 1024
+# ~32 MB payload per lane at the default T=1024: T rows x D f32
+T = __T__
 x, A, g, w1, w3, w2 = inputs("real_world", T)
 
 full = jax.jit(engine_fn("disagg", T))
@@ -52,8 +52,66 @@ print(json.dumps({
 """
 
 
-def run() -> list[tuple[str, float, str]]:
-    r = run_sub(CODE, timeout=1200)
+STAGING_CODE = PREAMBLE + """
+# fused vs unfused dispatch staging at the landed-buffer geometry: the
+# unfused chain materialises every intermediate (separate dispatches — the
+# structural analog of the HBM round-trips the fused kernel removes), the
+# fused path is gather + SwiGLU + gated scatter-add inside ONE jit via the
+# kernels.ops wrappers.  CPU-relative, like every wall time here.
+from repro.kernels import ops as kops
+
+T = __T__
+S, EL = EP, max(1, E // EP)
+C = max(8, int(2.0 * T * K / E))
+ks = jax.random.split(jax.random.PRNGKey(0), 6)
+w1 = jax.random.normal(ks[1], (EL, D, F)) * 0.1
+w3 = jax.random.normal(ks[2], (EL, D, F)) * 0.1
+w2 = jax.random.normal(ks[3], (EL, F, D)) * 0.1
+n = S * EL * C
+src = jax.random.normal(ks[4], (n, D))
+idx = jax.random.permutation(ks[5], n).astype(jnp.int32)
+gates = jnp.ones((n,), jnp.float32)
+
+g_op = jax.jit(lambda s, i: kops.segment_gather(s, i))
+h_op = jax.jit(lambda r, w: jnp.einsum("secd,edf->secf", r, w))
+a_op = jax.jit(lambda h, u: jax.nn.silu(h) * u)
+o_op = jax.jit(lambda a, w: jnp.einsum("secf,efd->secd", a, w))
+s_op = jax.jit(lambda r, i, g: kops.segment_scatter_add(r, i, g, n))
+
+def unfused():
+    r = g_op(src, idx).reshape(S, EL, C, D)
+    h = h_op(r, w1); u = h_op(r, w3)
+    o = o_op(a_op(h, u), w2)
+    return s_op(o.reshape(n, D), idx, gates).block_until_ready()
+
+fused_fn = jax.jit(lambda s: kops.segment_scatter_add(
+    kops.fused_swiglu(kops.segment_gather(s, idx).reshape(S, EL, C, D),
+                      w1, w3, w2).reshape(n, D), idx, gates, n))
+
+def fused():
+    return fused_fn(src).block_until_ready()
+
+def bench(f, reps=20):
+    f()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f()
+    return (time.perf_counter() - t0) / reps
+
+t_unfused = bench(unfused)
+t_fused = bench(fused)
+print(json.dumps({
+    "staging_unfused": t_unfused,
+    "staging_fused": t_fused,
+    "staging_speedup": t_unfused / t_fused,
+    "staging_mb": n * D * 4 / 1e6,
+}))
+"""
+
+
+def run(t: int = 1024) -> list[tuple[str, float, str]]:
+    r = run_sub(CODE.replace("__T__", str(t)), timeout=1200)
+    rs = run_sub(STAGING_CODE.replace("__T__", str(t)), timeout=1200)
     return [
         ("breakdown/disagg_total", r["disagg_total"] * 1e6, ""),
         ("breakdown/fused_total", r["fused_total"] * 1e6, ""),
@@ -61,4 +119,8 @@ def run() -> list[tuple[str, float, str]]:
         ("breakdown/rearrange_passes", r["rearrange_passes"] * 1e6, ""),
         ("breakdown/rearr_ratio_of_total", r["rearr_ratio"] * 100, "%"),
         ("breakdown/payload_mb", r["payload_mb"], "MB"),
+        ("breakdown/staging_unfused", rs["staging_unfused"] * 1e6, ""),
+        ("breakdown/staging_fused", rs["staging_fused"] * 1e6, ""),
+        ("breakdown/staging_fused_speedup", rs["staging_speedup"], "x"),
+        ("breakdown/staging_mb", rs["staging_mb"], "MB"),
     ]

@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--sizes", default=None,
                     help="comma-separated token counts per lane for the "
                          "suites that take sizes (traffic, ablation, "
-                         "pipeline, e2e, serving) — e.g. --sizes 64 for the "
-                         "CI smoke run")
+                         "pipeline, e2e, serving, breakdown) — e.g. "
+                         "--sizes 64 for the CI smoke run")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.sizes.split(",")] if args.sizes else None)
 
@@ -45,7 +45,7 @@ def main() -> None:
             if sizes is not None and name == "traffic":
                 rows = mod.run(sizes=tuple(sizes))
             elif sizes is not None and name in ("ablation", "pipeline", "e2e",
-                                                "serving"):
+                                                "serving", "breakdown"):
                 rows = mod.run(t=sizes[-1])
             else:
                 rows = mod.run()

@@ -103,6 +103,7 @@ from repro.core import pipesim
 from repro.core import planner as planner_lib
 from repro.core.descriptors import drop_neg, gather_rows
 from repro.core.routing import ExpertPlacement
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 
@@ -207,8 +208,11 @@ def flat_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     cap = _cap(t * k / (placement.ep * e_local), cfg.capacity_factor)
     plan = planner_lib.build_flat_plan(A, gates, placement, cap)
 
-    # ONE fused gather: original layout -> comm buffer (EP, E_local*C, d)
-    buf = gather_rows(x, plan.src_of_slot)                   # (EP*E_local*C, d)
+    # ONE fused gather: original layout -> comm buffer (EP, E_local*C, d).
+    # Kernel-routed: the descriptor interpretation IS the Pallas index_map
+    # when use_pallas(), so rows stream into slot order without an
+    # intermediate materialisation (jnp reference otherwise).
+    buf = kops.segment_gather(x, plan.src_of_slot)           # (EP*E_local*C, d)
     buf = _flat_exchange(buf.reshape(placement.ep, e_local * cap, d), cfg,
                          placement.ep)
     # landed layout: (source lane, E_local, C, d) — expert-grouped already.
@@ -224,10 +228,8 @@ def flat_combine(expert_out: jax.Array, res: DispatchResult,
                          cfg, placement.ep, reverse=True)
     buf = buf.reshape(placement.ep * e_local * cap, d)
     # fused weighted scatter-add straight into the original token layout
-    w = plan.gate_of_slot[:, None].astype(buf.dtype)
-    y = jnp.zeros((t, d), buf.dtype).at[drop_neg(plan.src_of_slot, t)].add(
-        buf * w, mode="drop")
-    return y
+    return kops.segment_scatter_add(buf, plan.src_of_slot,
+                                    plan.gate_of_slot, t)
 
 
 # ======================================================================
@@ -259,7 +261,7 @@ def dedup_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     c2 = _cap(t * k / e_local, cfg.capacity_factor)
 
     plan1 = planner_lib.build_condensed_plan(A, gates, placement, c1)
-    buf = gather_rows(x, plan1.src_of_slot)                  # (EP*C1, d)
+    buf = kops.segment_gather(x, plan1.src_of_slot)          # (EP*C1, d)
     buf = _flat_exchange(buf.reshape(ep, c1, d), cfg, ep)
     me = _flat_exchange(plan1.meta_expert.reshape(ep, c1, k), cfg, ep)
     mg = _flat_exchange(plan1.meta_gate.reshape(ep, c1, k), cfg, ep)
@@ -268,7 +270,7 @@ def dedup_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     # this lane's local expert indices directly)
     plan2 = planner_lib.build_stage2_plan(
         me.reshape(ep * c1, k), mg.reshape(ep * c1, k), 1, e_local, c2)
-    buf2 = gather_rows(buf.reshape(ep * c1, d), plan2.src_of_slot)
+    buf2 = kops.segment_gather(buf.reshape(ep * c1, d), plan2.src_of_slot)
     expert_rows = buf2.reshape(1, e_local, c2, d)
     row_gates = plan2.gate_of_slot.reshape(1, e_local, c2)
     return DispatchResult(expert_rows, row_gates,
@@ -288,15 +290,14 @@ def dedup_combine(expert_out: jax.Array, res: DispatchResult,
     out = expert_out * res.row_gates[..., None].astype(expert_out.dtype)
     out = out.reshape(-1, d)
     # landing-lane pre-combine: sum this lane's expert partials per wire row
-    part = jnp.zeros((ep * c1, d), out.dtype).at[
-        drop_neg(plan2.src_of_slot, ep * c1)].add(out, mode="drop")
+    part = kops.segment_scatter_add(
+        out, plan2.src_of_slot, jnp.ones(out.shape[:1], jnp.float32), ep * c1)
     part = _flat_exchange(part.reshape(ep, c1, d), cfg, ep, reverse=True)
     # origin: gates were applied at the expert, dedup handled by the
     # landing-lane pre-combine — plain scatter-add per condensed row.
-    y = jnp.zeros((t, d), part.dtype).at[
-        drop_neg(plan1.src_of_slot, t)].add(part.reshape(ep * c1, d),
-                                            mode="drop")
-    return y
+    part = part.reshape(ep * c1, d)
+    return kops.segment_scatter_add(
+        part, plan1.src_of_slot, jnp.ones((ep * c1,), jnp.float32), t)
 
 
 # ======================================================================
@@ -331,10 +332,7 @@ def pipe_geometry(t: int, k: int, d: int, itemsize: int,
         s = cfg.pipe_slices
     else:
         payload = float(placement.ep * e_local * cap * d * itemsize)
-        p = pipesim.PipeParams(payload_bytes=payload,
-                               stage_bw=cfg.pipe_stage_bw,
-                               wire_bw=cfg.pipe_wire_bw,
-                               per_slice_overhead_s=cfg.pipe_overhead_s)
+        p = pipesim.params_from_dcomm(payload, cfg)
         if attn_s > 0.0:
             s = pipesim.plan_tx_stream(
                 p, max(1, n_layers), max(1, interleave), attn_s,
@@ -373,7 +371,7 @@ def pipe_issue(x: jax.Array, src_slice: jax.Array, placement: ExpertPlacement,
     """
     ep, d = placement.ep, x.shape[1]
     _, e_local, cs = src_slice.shape
-    buf = gather_rows(x, src_slice.reshape(-1))
+    buf = kops.segment_gather(x, src_slice.reshape(-1))
     buf = _flat_exchange(buf.reshape(ep, e_local * cs, d), cfg, ep)
     return buf.reshape(ep, e_local, cs, d)
 
@@ -393,9 +391,8 @@ def pipe_return_consume(y: jax.Array, returned: jax.Array,
                         src_slice: jax.Array, gate_slice: jax.Array,
                         t: int) -> jax.Array:
     """Local half of one slice's combine: weighted scatter-add into ``y``."""
-    w = gate_slice.reshape(-1, 1).astype(returned.dtype)
-    return y.at[drop_neg(src_slice.reshape(-1), t)].add(returned * w,
-                                                        mode="drop")
+    return y + kops.segment_scatter_add(returned, src_slice.reshape(-1),
+                                        gate_slice.reshape(-1), t)
 
 
 def pipe_consume(y: jax.Array, landed: jax.Array, src_slice: jax.Array,
@@ -559,7 +556,7 @@ def hier_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
     plan1 = planner_lib.build_hier_plan(A, gates, placement, c1, my_lane, assignment)
 
     # ---- stage 1: node-level forwarding (dedup, slow tier) -----------------
-    buf1 = gather_rows(x, plan1.src_of_slot)                 # (EP*C1, d)
+    buf1 = kops.segment_gather(x, plan1.src_of_slot)         # (EP*C1, d)
     me = plan1.meta_expert                                   # (EP*C1, K)
     mg = plan1.meta_gate
     if cfg.pod_axis is not None:
@@ -582,7 +579,7 @@ def hier_dispatch(x: jax.Array, A: jax.Array, gates: jax.Array,
 
     # ---- stage 2: expert-level distribution (fast tier, expansion) ---------
     plan2 = planner_lib.build_stage2_plan(me, mg, ns, e_local, c2)
-    buf2 = gather_rows(buf1, plan2.src_of_slot)              # (ns*E_local*C2, d)
+    buf2 = kops.segment_gather(buf1, plan2.src_of_slot)      # (ns*E_local*C2, d)
     g2 = plan2.gate_of_slot                                  # (ns*E_local*C2,)
 
     groups = None
@@ -615,8 +612,9 @@ def hier_combine(expert_out: jax.Array, res: DispatchResult,
                              axis_index_groups=groups)
     out = out.reshape(ns * e_local * c2, d)
     # forwarder pre-combine: sum this node's expert partials per stage-1 row
-    part = jnp.zeros((placement.ep * c1, d), out.dtype).at[
-        drop_neg(plan2.src_of_slot, placement.ep * c1)].add(out, mode="drop")
+    part = kops.segment_scatter_add(
+        out, plan2.src_of_slot, jnp.ones(out.shape[:1], jnp.float32),
+        placement.ep * c1)
     # return over the slow tier (deduplicated bytes both directions)
     if cfg.pod_axis is not None:
         npod = axis_size(cfg.pod_axis)
@@ -630,9 +628,8 @@ def hier_combine(expert_out: jax.Array, res: DispatchResult,
         part = part.reshape(placement.ep * c1, d)
     # origin: per-node partials land in my stage-1 slots; gates were applied
     # at the expert, dedup handled by the forwarder pre-combine.
-    y = jnp.zeros((t, d), part.dtype).at[
-        drop_neg(plan1.src_of_slot, t)].add(part, mode="drop")
-    return y
+    return kops.segment_scatter_add(
+        part, plan1.src_of_slot, jnp.ones(part.shape[:1], jnp.float32), t)
 
 
 # ======================================================================

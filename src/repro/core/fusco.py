@@ -36,7 +36,8 @@ import jax.numpy as jnp
 from repro.core import dcomm
 from repro.core.dcomm import DcommConfig, DispatchResult
 from repro.core.routing import (ExpertPlacement, router_logits, top_k_routing)
-from repro.layers.attention import gqa_project, reference_attention
+from repro.kernels import ops as kops
+from repro.layers.attention import gqa_project
 from repro.layers.common import apply_rope, rms_norm
 
 
@@ -45,13 +46,13 @@ def swiglu_experts(rows: jax.Array, w1: jax.Array, w3: jax.Array,
     """Grouped SwiGLU FFN consuming the landed buffer in place.
 
     rows: (S, E_local, C, d); w1/w3: (E_local, d, f); w2: (E_local, f, d).
-    The local-expert dimension is a batch dim of the einsum — no data
-    rearrangement is required because dispatch landed rows expert-grouped.
+    The local-expert dimension is a batch dim — no data rearrangement is
+    required because dispatch landed rows expert-grouped.  Routed through
+    ``kernels.ops.fused_swiglu``: with ``use_pallas()`` the whole
+    gate/up/SiLU/down chain is ONE Pallas kernel whose (C, f) hidden
+    activations never round-trip HBM; otherwise the jnp einsum reference.
     """
-    h = jnp.einsum("secd,edf->secf", rows, w1)
-    u = jnp.einsum("secd,edf->secf", rows, w3)
-    a = jax.nn.silu(h) * u
-    return jnp.einsum("secf,efd->secd", a, w2)
+    return kops.fused_swiglu(rows, w1, w3, w2)
 
 
 def dispatch(x, A, gates, placement: ExpertPlacement, cfg: DcommConfig,
@@ -344,7 +345,10 @@ def tx_attention(h: jax.Array, lp, pos_q: jax.Array, pos_k: jax.Array, *,
     for ax in reversed(tuple(ep_axes)):      # inner axis first: global order
         k = jax.lax.all_gather(k, ax, axis=1, tiled=True)
         v = jax.lax.all_gather(v, ax, axis=1, tiled=True)
-    a = reference_attention(q, k, v, pos_q, pos_k, causal=True)
+    # position-safe block-skipping flash (Pallas when use_pallas(), lax flash
+    # otherwise): the shifted pos_q chunk masks/skips from actual per-block
+    # position bounds, so the island no longer needs the O(S²) reference core.
+    a = kops.flash_attention(q, k, v, pos_q, pos_k, causal=True)
     b, s = h.shape[0], h.shape[1]
     out = a.reshape(b, s, n_heads * head_dim) @ lp["wo"]
     if return_kv:

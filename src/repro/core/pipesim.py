@@ -35,6 +35,15 @@ class PipeParams:
     ring_slots: int = 2              # double buffering
 
 
+def params_from_dcomm(payload_bytes: float, cfg) -> PipeParams:
+    """PipeParams at a DcommConfig's hardware point — the paper's A100/CX-7
+    defaults, or whatever ``core.calibrate`` measured on this platform."""
+    return PipeParams(payload_bytes=float(payload_bytes),
+                      stage_bw=cfg.pipe_stage_bw,
+                      wire_bw=cfg.pipe_wire_bw,
+                      per_slice_overhead_s=cfg.pipe_overhead_s)
+
+
 def simulate(p: PipeParams, slice_bytes: float) -> dict:
     """Event-driven simulation of producer/consumer over a bounded ring."""
     n = max(1, int(-(-p.payload_bytes // slice_bytes)))

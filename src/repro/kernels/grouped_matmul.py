@@ -4,7 +4,9 @@ Consumes the dense_fused engine's landed layout (G groups × C capacity rows ×
 d) IN PLACE — each group's rows multiply that group's expert weight — so the
 expert FFN needs no post-communication rearrangement (the FUSCO property).
 Group occupancy counts are scalar-prefetched; fully-empty row-blocks skip the
-MXU work.
+MXU work, and rows at positions >= counts[g] inside partially occupied blocks
+are masked to zero at the output write (row-granular contract — padding rows
+never leak garbage downstream).
 
 Grid: (G, C/block_c, f/block_f, d/block_d) with an f32 VMEM accumulator over
 the contraction dimension.  Block sizes default to MXU-aligned 128 multiples.
@@ -44,7 +46,12 @@ def _gmm_kernel(counts_ref, x_ref, w_ref, out_ref, acc_ref, *, block_c):
 
     @pl.when(k == nk - 1)
     def _out():
-        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+        # row-granular occupancy mask: rows >= counts[g] are dead padding in
+        # the landed layout and must write zeros, not stale matmul output
+        rows = ci * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, acc_ref.shape, 0)
+        live = rows < counts_ref[g]
+        out_ref[0] = jnp.where(live, acc_ref[...], 0.0).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit,
@@ -55,8 +62,9 @@ def grouped_matmul(x: jax.Array, w: jax.Array, counts: jax.Array, *,
                    block_d: int = 128, interpret: bool = True) -> jax.Array:
     """x: (G, C, d) grouped rows; w: (G, d, f); counts: (G,) occupancy.
 
-    Returns (G, C, f) = x @ w per group (padding rows produce garbage in
-    skipped blocks' positions only when fully empty — they are zeroed).
+    Returns (G, C, f) = x @ w per group; rows at positions >= counts[g]
+    (padding) are zero — row-granular, including inside partially occupied
+    blocks.
     """
     g, c, d = x.shape
     _, _, f = w.shape

@@ -22,14 +22,29 @@ def segment_scatter_add_ref(src: jax.Array, dst: jax.Array, gates: jax.Array,
     return out.astype(src.dtype)
 
 
-def grouped_matmul_ref(x: jax.Array, w: jax.Array, counts: jax.Array,
-                       block_c: int = 128) -> jax.Array:
-    """Per-group matmul with block-granular occupancy skipping semantics:
-    row-blocks entirely beyond a group's count are zero."""
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, counts: jax.Array) -> jax.Array:
+    """Per-group matmul with row-granular occupancy masking: rows at
+    positions >= counts[g] are zero (the Pallas kernel's contract — padding
+    rows never leak garbage, even inside partially occupied blocks)."""
     g, c, d = x.shape
     out = jnp.einsum("gcd,gdf->gcf", x.astype(jnp.float32),
                      w.astype(jnp.float32))
-    bc = min(block_c, c)
-    blk = jnp.arange(c) // bc
-    live = counts[:, None] > blk[None, :] * bc
+    live = counts[:, None] > jnp.arange(c)[None, :]
     return (out * live[..., None]).astype(x.dtype)
+
+
+def fused_swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                     w2: jax.Array, counts: jax.Array | None = None) -> jax.Array:
+    """Grouped SwiGLU oracle for the fused staging kernel.
+
+    x: (S, E, C, d) landed rows; w1/w3: (E, d, f); w2: (E, f, d);
+    counts: (S, E) occupancy or None (all rows live).  Rows at positions
+    >= counts are zero, row-granular like :func:`grouped_matmul_ref`.
+    """
+    h = jnp.einsum("secd,edf->secf", x, w1)
+    u = jnp.einsum("secd,edf->secf", x, w3)
+    out = jnp.einsum("secf,efd->secd", jax.nn.silu(h) * u, w2)
+    if counts is not None:
+        live = counts[..., None] > jnp.arange(x.shape[2])
+        out = jnp.where(live[..., None], out, 0)
+    return out

@@ -229,6 +229,10 @@ def main(argv=None):
                          "placement); stats are collected either way")
     ap.add_argument("--traffic-decay", type=float, default=0.99,
                     help="EMA decay of the online traffic statistics")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure pipe stage/wire/overhead constants on this "
+                         "platform before building the context (replaces the "
+                         "paper's A100/CX-7 defaults in pipesim + commplan)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -246,6 +250,14 @@ def main(argv=None):
               flush=True)
         auto_engine = False
     base_engine = "fused_hier" if args.engine == "auto" else args.engine
+    calibration = None
+    if args.calibrate:
+        from repro.core import calibrate as calibrate_lib
+        calibration = calibrate_lib.calibrate()
+        print(f"[calibrate] {calibration.platform}: "
+              f"stage {calibration.stage_bw / 1e9:.1f} GB/s, "
+              f"wire {calibration.wire_bw / 1e9:.1f} GB/s, "
+              f"overhead {calibration.overhead_s * 1e6:.1f} us", flush=True)
     ctx = make_context(cfg, mesh, multi_pod=False, engine=base_engine,
                        capacity_factor=args.capacity_factor,
                        node_size=max(1, mesh.shape["model"] // 2),
@@ -253,7 +265,7 @@ def main(argv=None):
                        moe_interleave=args.moe_interleave,
                        pipe_slices=args.pipe_slices,
                        traffic_decay=args.traffic_decay,
-                       dedup=args.dedup)
+                       dedup=args.dedup, calibration=calibration)
     # resuming a run that relayouted: the checkpoint's weights are laid out
     # per the placement-history sidecar, not the arithmetic map
     if cfg.moe is not None and cfg.family in ("moe", "moe_ffn", "moe_tx"):

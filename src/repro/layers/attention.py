@@ -13,6 +13,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.layers.common import apply_mrope, apply_rope, rms_norm
 
@@ -47,22 +48,52 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out
 
 
-def _visible_pairs(nq, nk, qb, kb, causal, window):
-    """Static list of (q-block, kv-block) pairs that can contain unmasked
-    entries, assuming positions are contiguous aranges (train/prefill).
-    Fully-masked blocks are SKIPPED — this is where SWA/causal earn their
-    sub-quadratic cost (block-skipping flash)."""
+def _visible_pairs(qp, kp, causal, window):
+    """(pairs, runtime_skip): the (q-block, kv-block) pairs that can contain
+    unmasked entries, derived from the ACTUAL per-block position bounds
+    (``qp``/``kp`` are the block-reshaped (nq, qb)/(nk, kb) positions) — never
+    from block *indices*, so shifted island chunks and ring-cache layouts are
+    masked correctly.  Fully-masked blocks are SKIPPED — this is where
+    SWA/causal earn their sub-quadratic cost (block-skipping flash).
+
+    When positions are concrete (eager call) the pair list is pruned here and
+    ``runtime_skip`` is False.  Under tracing (jit/shard_map) the bounds are
+    unknown at trace time, so every pair is enumerated and ``runtime_skip``
+    tells the scan body to gate each block on the same bounds via
+    ``lax.cond`` — statically dense, dynamically skipped.
+    """
+    nq, nk = qp.shape[0], kp.shape[0]
+    if not causal and window is None:
+        return [(i, j) for i in range(nq) for j in range(nk)], False
+    try:
+        qmn, qmx = np.asarray(qp.min(axis=1)), np.asarray(qp.max(axis=1))
+        kmn, kmx = np.asarray(kp.min(axis=1)), np.asarray(kp.max(axis=1))
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return [(i, j) for i in range(nq) for j in range(nk)], True
     pairs = []
     for i in range(nq):
-        q_lo, q_hi = i * qb, (i + 1) * qb - 1
         for j in range(nk):
-            k_lo, k_hi = j * kb, (j + 1) * kb - 1
-            if causal and k_lo > q_hi:
+            if causal and kmn[j] > qmx[i]:
                 continue
-            if window is not None and k_hi < q_lo - window + 1:
+            if window is not None and qmn[i] - kmx[j] >= window:
                 continue
             pairs.append((i, j))
-    return pairs
+    return pairs, False
+
+
+def _pairs_array(pairs) -> jax.Array:
+    return jnp.asarray(np.asarray(pairs, np.int32).reshape(-1, 2))
+
+
+def _pair_visible(qp, kp, i, j, causal, window) -> jax.Array:
+    """Traced scalar: can block pair (i, j) contain an unmasked entry?"""
+    vis = jnp.bool_(True)
+    if causal:
+        vis &= kp[j].min() <= qp[i].max()
+    if window is not None:
+        vis &= qp[i].min() - kp[j].max() < window
+    return vis
 
 
 def _flash_fwd_inner(q, k, v, q_positions, k_positions, causal, window,
@@ -80,33 +111,42 @@ def _flash_fwd_inner(q, k, v, q_positions, k_positions, causal, window,
     vr = jnp.moveaxis(v.reshape(b, nk, kb, hkv, hd), 1, 0)
     qp = q_positions.reshape(nq, qb)
     kp = k_positions.reshape(nk, kb)
-    pairs = jnp.array(_visible_pairs(nq, nk, qb, kb, causal, window),
-                      jnp.int32)
+    pairs, runtime_skip = _visible_pairs(qp, kp, causal, window)
+    pairs = _pairs_array(pairs)
 
     def pair_step(carry, pair):
-        acc, m_run, l_run = carry                        # (nq, b, hkv, g, qb, ...)
         i, j = pair[0], pair[1]
-        qc = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
-        kc = jax.lax.dynamic_index_in_dim(kr, j, 0, keepdims=False)
-        vc = jax.lax.dynamic_index_in_dim(vr, j, 0, keepdims=False)
-        qpos = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
-        kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
-        mask = _block_mask(qpos, kpos, causal, window)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
-        m_i = jax.lax.dynamic_index_in_dim(m_run, i, 0, keepdims=False)
-        l_i = jax.lax.dynamic_index_in_dim(l_run, i, 0, keepdims=False)
-        a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
-        m_new = jnp.maximum(m_i, s.max(axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m_i - m_new)
-        l_new = l_i * corr + p.sum(axis=-1)
-        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
-        a_new = a_i * corr[..., None].astype(a_i.dtype) + pv
-        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
-        m_run = jax.lax.dynamic_update_index_in_dim(m_run, m_new, i, 0)
-        l_run = jax.lax.dynamic_update_index_in_dim(l_run, l_new, i, 0)
-        return (acc, m_run, l_run), None
+
+        def visit(carry):
+            acc, m_run, l_run = carry                    # (nq, b, hkv, g, qb, ...)
+            qc = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
+            kc = jax.lax.dynamic_index_in_dim(kr, j, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vr, j, 0, keepdims=False)
+            qpos = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+            kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
+            mask = _block_mask(qpos, kpos, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_i = jax.lax.dynamic_index_in_dim(m_run, i, 0, keepdims=False)
+            l_i = jax.lax.dynamic_index_in_dim(l_run, i, 0, keepdims=False)
+            a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
+            a_new = a_i * corr[..., None].astype(a_i.dtype) + pv
+            acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+            m_run = jax.lax.dynamic_update_index_in_dim(m_run, m_new, i, 0)
+            l_run = jax.lax.dynamic_update_index_in_dim(l_run, l_new, i, 0)
+            return (acc, m_run, l_run)
+
+        if runtime_skip:
+            carry = jax.lax.cond(_pair_visible(qp, kp, i, j, causal, window),
+                                 visit, lambda c: c, carry)
+        else:
+            carry = visit(carry)
+        return carry, None
 
     acc0 = jnp.zeros((nq, b, hkv, g, qb, hd), v.dtype)
     m0 = jnp.full((nq, b, hkv, g, qb), NEG_INF, jnp.float32)
@@ -147,40 +187,49 @@ def _flash_bwd(causal, window, q_block, kv_block, res, dout):
     # D_i = rowsum(dout * out): (nq, b, qb, hkv, g)
     delta = jnp.sum(dor.astype(jnp.float32) * outr.astype(jnp.float32), axis=-1)
     lse_r = jnp.moveaxis(lse, 0, 1)                      # (nq, b, hkv, g, qb)
-    pairs = jnp.array(_visible_pairs(nq, nk, qb, kb, causal, window),
-                      jnp.int32)
+    pairs, runtime_skip = _visible_pairs(qp, kp, causal, window)
+    pairs = _pairs_array(pairs)
 
     def pair_step(carry, pair):
-        dq_a, dk_a, dv_a = carry
         i, j = pair[0], pair[1]
-        qc = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
-        doc = jax.lax.dynamic_index_in_dim(dor, i, 0, keepdims=False)
-        oc_lse = jax.lax.dynamic_index_in_dim(lse_r, i, 0, keepdims=False)
-        dlt = jax.lax.dynamic_index_in_dim(delta, i, 0, keepdims=False)
-        qpos = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
-        kc = jax.lax.dynamic_index_in_dim(kr, j, 0, keepdims=False)
-        vc = jax.lax.dynamic_index_in_dim(vr, j, 0, keepdims=False)
-        kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
-        mask = _block_mask(qpos, kpos, causal, window)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
-        p = jnp.exp(s - oc_lse[..., None])               # (b,hkv,g,qb,kb)
-        dv = jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(doc.dtype), doc)
-        dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc).astype(jnp.float32)
-        dlt_t = jnp.moveaxis(dlt, 1, 3)                  # (b,hkv,g,qb)
-        ds = p * (dp - dlt_t[..., None]) * scale
-        dq = jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kc.dtype), kc)
-        dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qc.dtype), qc)
-        dq_i = jax.lax.dynamic_index_in_dim(dq_a, i, 0, keepdims=False)
-        dq_a = jax.lax.dynamic_update_index_in_dim(
-            dq_a, dq_i + dq.astype(jnp.float32), i, 0)
-        dk_j = jax.lax.dynamic_index_in_dim(dk_a, j, 0, keepdims=False)
-        dk_a = jax.lax.dynamic_update_index_in_dim(
-            dk_a, dk_j + dk.astype(jnp.float32), j, 0)
-        dv_j = jax.lax.dynamic_index_in_dim(dv_a, j, 0, keepdims=False)
-        dv_a = jax.lax.dynamic_update_index_in_dim(
-            dv_a, dv_j + dv.astype(jnp.float32), j, 0)
-        return (dq_a, dk_a, dv_a), None
+
+        def visit(carry):
+            dq_a, dk_a, dv_a = carry
+            qc = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
+            doc = jax.lax.dynamic_index_in_dim(dor, i, 0, keepdims=False)
+            oc_lse = jax.lax.dynamic_index_in_dim(lse_r, i, 0, keepdims=False)
+            dlt = jax.lax.dynamic_index_in_dim(delta, i, 0, keepdims=False)
+            qpos = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+            kc = jax.lax.dynamic_index_in_dim(kr, j, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vr, j, 0, keepdims=False)
+            kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
+            mask = _block_mask(qpos, kpos, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - oc_lse[..., None])           # (b,hkv,g,qb,kb)
+            dv = jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(doc.dtype), doc)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc).astype(jnp.float32)
+            dlt_t = jnp.moveaxis(dlt, 1, 3)              # (b,hkv,g,qb)
+            ds = p * (dp - dlt_t[..., None]) * scale
+            dq = jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kc.dtype), kc)
+            dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qc.dtype), qc)
+            dq_i = jax.lax.dynamic_index_in_dim(dq_a, i, 0, keepdims=False)
+            dq_a = jax.lax.dynamic_update_index_in_dim(
+                dq_a, dq_i + dq.astype(jnp.float32), i, 0)
+            dk_j = jax.lax.dynamic_index_in_dim(dk_a, j, 0, keepdims=False)
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, dk_j + dk.astype(jnp.float32), j, 0)
+            dv_j = jax.lax.dynamic_index_in_dim(dv_a, j, 0, keepdims=False)
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, dv_j + dv.astype(jnp.float32), j, 0)
+            return (dq_a, dk_a, dv_a)
+
+        if runtime_skip:
+            carry = jax.lax.cond(_pair_visible(qp, kp, i, j, causal, window),
+                                 visit, lambda c: c, carry)
+        else:
+            carry = visit(carry)
+        return carry, None
 
     dq0 = jnp.zeros((nq, b, qb, hkv, g, hd), jnp.float32)
     dk0 = jnp.zeros((nk, b, kb, hkv, hd), jnp.float32)

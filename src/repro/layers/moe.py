@@ -36,6 +36,7 @@ from repro.core.routing import (ExpertPlacement, balanced_replica_choice,
 from repro.core import balancer as balancer_lib
 from repro.core import fusco
 from repro.core import traffic as traffic_lib
+from repro.kernels import ops as kops
 
 
 def moe_block(x: jax.Array, moe_params, *, mesh, placement: ExpertPlacement,
@@ -365,11 +366,13 @@ def moe_decode_block(x: jax.Array, moe_p, *, mesh, placement: ExpertPlacement,
         if len(ep_axes) == 2:
             my = my + jax.lax.axis_index(ep_axes[0]) * (
                 placement.ep // axis_size(ep_axes[0]))
-        # masked dense compute over this lane's experts
-        h1 = jnp.einsum("td,edf->tef", xt, w1[0])
-        h3 = jnp.einsum("td,edf->tef", xt, w3[0])
-        act = jax.nn.silu(h1) * h3
-        out_e = jnp.einsum("tef,efd->ted", act, w2[0])   # (T, E_local, d)
+        # masked dense compute over this lane's experts — every token through
+        # every local expert, which is exactly the fused staging kernel's
+        # (S=1, E_local, C=T, d) landed layout with all rows live
+        rows = jnp.broadcast_to(xt[None, None],
+                                (1, w1.shape[1]) + xt.shape)
+        out_e = kops.fused_swiglu(rows, w1[0], w3[0], w2[0])[0]
+        out_e = jnp.moveaxis(out_e, 0, 1)                # (T, E_local, d)
         mask = (lane == my)[..., None] & (
             eloc[..., None] == jnp.arange(placement.experts_per_lane))
         w = (mask * gates[..., None]).sum(axis=1).astype(out_e.dtype)  # (T, E_local)

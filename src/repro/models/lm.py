@@ -122,7 +122,7 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
                  remat: bool = True, moe_stream: int = 0,
                  moe_interleave: int = 1, pipe_slices: int = 0,
                  traffic_decay: float = 0.99,
-                 dedup: bool = False) -> ModelContext:
+                 dedup: bool = False, calibration=None) -> ModelContext:
     placement = dcfg = None
     if cfg.moe is not None:
         axes = dict(mesh.shape)
@@ -134,6 +134,12 @@ def make_context(cfg: ArchConfig, mesh, *, multi_pod: bool,
                            capacity_factor=capacity_factor,
                            use_balancer=use_balancer,
                            pipe_slices=pipe_slices, dedup=dedup)
+        if calibration is not None:
+            # measured pipe constants (core.calibrate.CalibrationTable)
+            # replace the paper's A100/CX-7 defaults; pipesim and commplan
+            # both read them off the config
+            from repro.core import calibrate as calibrate_lib
+            dcfg = calibrate_lib.apply(calibration, dcfg)
     fsdp = False
     if cfg.moe is not None:
         per_lane_gb = (max(1, placement.experts_per_lane) * 3 * cfg.d_model

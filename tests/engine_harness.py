@@ -105,6 +105,17 @@ def driver_code(spec: dict) -> str:
             f"engine_harness.{fn}({json.dumps(spec)!r})\n")
 
 
+def pallas_driver_code(spec: dict) -> str:
+    """Like :func:`driver_code` but with the Pallas kernel path forced ON in
+    the subprocess (interpret mode on CPU): the engines' staging copies,
+    fused SwiGLU and island flash attention all route through the kernels,
+    checked end-to-end against the same dense oracles.  The env must be set
+    before any kernel call — ``kernels.ops`` resolves it per call, so setting
+    it first keeps the whole run on the kernel path."""
+    return ("import os\nos.environ['REPRO_USE_PALLAS'] = '1'\n"
+            + driver_code(spec))
+
+
 def _spec_env(spec):
     """Shared subprocess-side setup: mesh, EP topology and random weights."""
     import jax

@@ -329,6 +329,20 @@ def test_layer_stream_gradients_match_stacked_oracle(multidevice):
 
 
 @pytest.mark.slow
+def test_engine_gradients_match_dense_oracle_pallas(multidevice):
+    """Gradient parity with the Pallas kernel path forced ON (interpret mode):
+    the staging gathers/scatters and the fused SwiGLU run their custom VJPs
+    instead of autodiff through the jnp refs — the transposes must still land
+    exactly on the dense-oracle gradients."""
+    code = ("import os\nos.environ['REPRO_USE_PALLAS'] = '1'\n"
+            + _grad_code(4, 2, [("fused_flat", {}),
+                                ("fused_flat", {"dedup": True}),
+                                ("fused_hier", {})]))
+    out = multidevice(code, 4, timeout=900)
+    assert "ALL_GRADS_OK" in out
+
+
+@pytest.mark.slow
 def test_tx_stream_gradients_match_tx_oracle(multidevice):
     """jax.grad through the ATTENTION-separated stream (parallel attention+
     MoE blocks, MoE tail carried across the attention block, K∈{1,2} lanes)

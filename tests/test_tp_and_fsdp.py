@@ -104,14 +104,46 @@ def test_grad_accumulation_equivalent(multidevice):
 
 
 def test_visible_pairs_block_skipping():
+    import jax.numpy as jnp
     from repro.layers.attention import _visible_pairs
+
+    def blocks(n, b, offset=0):
+        return jnp.arange(n * b).reshape(n, b) + offset
+
     # causal full: lower triangle of blocks
-    p = _visible_pairs(4, 4, 16, 16, causal=True, window=None)
+    p, rt = _visible_pairs(blocks(4, 16), blocks(4, 16),
+                           causal=True, window=None)
+    assert not rt
     assert len(p) == 10 and (0, 1) not in p and (3, 0) in p
     # SWA: banded
-    p = _visible_pairs(8, 8, 16, 16, causal=True, window=16)
+    p, rt = _visible_pairs(blocks(8, 16), blocks(8, 16),
+                           causal=True, window=16)
+    assert not rt
     # each q block needs its own + previous kv block only
     assert all(j in (i - 1, i) for i, j in p)
     # non-causal cross attention: all pairs
-    p = _visible_pairs(2, 3, 16, 16, causal=False, window=None)
+    p, rt = _visible_pairs(blocks(2, 16), blocks(3, 16),
+                           causal=False, window=None)
+    assert not rt
     assert len(p) == 6
+    # shifted island chunk: q positions start at 32, so every kv block up
+    # to the q chunk's end is visible — index-based pruning would have kept
+    # only the lower triangle (3 pairs) and silently zeroed real scores
+    p, rt = _visible_pairs(blocks(2, 16, offset=32), blocks(4, 16),
+                           causal=True, window=None)
+    assert not rt
+    assert len(p) == 7 and (0, 2) in p and (1, 3) in p
+
+
+def test_visible_pairs_traced_positions_fall_back_to_runtime():
+    import jax
+    import jax.numpy as jnp
+    from repro.layers.attention import _visible_pairs
+
+    def f(qp, kp):
+        pairs, rt = _visible_pairs(qp, kp, causal=True, window=None)
+        assert rt, "traced positions must take the runtime-gated path"
+        assert len(pairs) == 4  # no static pruning possible
+        return jnp.zeros(())
+
+    jax.jit(f)(jnp.arange(32).reshape(2, 16), jnp.arange(32).reshape(2, 16))
